@@ -1,0 +1,54 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.core import (
+    ArraySpec,
+    MemLevel,
+    search_blocking,
+)
+from repro.core.loopnest import LoopNest
+from repro.core.optimizer import HardwareConfig, LayerResult, ck_dataflow
+
+# cache layer results across hw configs / figures (keyed by bounds + hw)
+_LAYER_CACHE: dict = {}
+
+
+def cached_optimize_layer(
+    nest: LoopNest, hw: HardwareConfig, beam: int = 16
+) -> LayerResult:
+    key = (
+        tuple(sorted(nest.bounds.items())),
+        tuple(t.name for t in nest.tensors),
+        hw.name, hw.array.dims, hw.rf_bytes, hw.buffer_bytes, beam,
+    )
+    if key in _LAYER_CACHE:
+        return _LAYER_CACHE[key]
+    df = ck_dataflow(nest, hw.array)
+    res = search_blocking(nest, hw.levels(), hw.array, df, beam=beam)
+    out = LayerResult(nest=nest, report=res.best, dataflow=df)
+    _LAYER_CACHE[key] = out
+    return out
+
+
+def network_energy(layers, hw: HardwareConfig, beam: int = 16) -> float:
+    return sum(
+        cached_optimize_layer(n, hw, beam).report.energy_pj for n in layers
+    )
+
+
+@contextmanager
+def timed(results: list, name: str, derived: str = ""):
+    t0 = time.perf_counter()
+    holder = {}
+    yield holder
+    us = (time.perf_counter() - t0) * 1e6
+    results.append((name, us, holder.get("derived", derived)))
+
+
+def print_csv(results):
+    for name, us, derived in results:
+        print(f"{name},{us:.0f},{derived}")

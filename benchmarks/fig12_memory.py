@@ -1,0 +1,58 @@
+"""Fig 11/12 analogue: memory resource allocation dominates energy.
+
+Paper claims: (a) with a 512 B RF the RF level dominates AlexNet energy;
+(b) shrinking the RF to 32-64 B improves total energy up to ~2.6x;
+(c) growing the SRAM buffer beyond 256 KB gives negligible returns;
+(d) a two-level RF (16 B + 256 B) + 256 KB buffer adds ~25%.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import network_energy
+from repro.core import ArraySpec
+from repro.core.networks import alexnet
+from repro.core.optimizer import HardwareConfig
+
+ARR = ArraySpec(dims=(16, 16))
+
+
+def rf_sweep(beam: int = 12):
+    layers = alexnet()
+    rows = []
+    for rf in (32, 64, 128, 256, 512):
+        for buf_k in (64, 128, 256, 512):
+            hw = HardwareConfig(
+                f"rf{rf}-buf{buf_k}k", ARR, (rf,), (buf_k * 1024,)
+            )
+            rows.append((rf, buf_k, network_energy(layers, hw, beam)))
+    return rows
+
+
+def two_level_rf(beam: int = 12):
+    layers = alexnet()
+    one = HardwareConfig("rf64", ARR, (64,), (256 * 1024,))
+    two = HardwareConfig("rf16+256", ARR, (16, 256), (256 * 1024,))
+    return (
+        network_energy(layers, one, beam),
+        network_energy(layers, two, beam),
+    )
+
+
+def main():
+    rows = rf_sweep()
+    base = next(e for rf, bk, e in rows if rf == 512 and bk == 128)
+    best = min(rows, key=lambda r: r[2])
+    for rf, buf_k, e in rows:
+        print(f"fig12,rf={rf}B,buf={buf_k}KB,energy={e/1e6:.0f}uJ,"
+              f"vs_eyeriss512={base/e:.2f}x")
+    print(
+        f"fig12,summary,best=rf{best[0]}-buf{best[1]}k,"
+        f"improvement={base/best[2]:.2f}x"
+    )
+    e1, e2 = two_level_rf()
+    print(f"fig12,two_level_rf,one={e1/1e6:.0f}uJ,two={e2/1e6:.0f}uJ,"
+          f"gain={e1/e2:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig 13 analogue: optimal memory allocation vs PE-array size.
+
+Paper claims: as the PE count grows, the optimal per-level memory size grows
+SUB-linearly (access energy grows with size), and total energy decreases
+slightly (more on-chip reuse, mostly nearest-neighbor traffic).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import network_energy
+from repro.core import ArraySpec
+from repro.core.networks import alexnet
+from repro.core.optimizer import HardwareConfig, RF_CHOICES, BUF_CHOICES
+
+
+def run(beam: int = 10):
+    layers = alexnet()
+    rows = []
+    for dim in (8, 16, 32):
+        arr = ArraySpec(dims=(dim, dim))
+        best = None
+        for rf in RF_CHOICES:
+            for buf in BUF_CHOICES:
+                hw = HardwareConfig(
+                    f"pe{dim}-rf{rf}-buf{buf//1024}k", arr, (rf,), (buf,)
+                )
+                try:
+                    e = network_energy(layers, hw, beam)
+                except ValueError:
+                    continue
+                if best is None or e < best[0]:
+                    best = (e, rf, buf)
+        rows.append((dim * dim, best))
+    return rows
+
+
+def main():
+    rows = run()
+    for n_pe, (e, rf, buf) in rows:
+        print(
+            f"fig13,pes={n_pe},opt_rf={rf}B,opt_buf={buf//1024}KB,"
+            f"energy={e/1e6:.0f}uJ,total_rf={n_pe*rf//1024}KB"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Fig 14: the efficient optimizer vs the two baselines on all 9 benchmarks.
+
+Paper claims: up to 3.5x / 2.7x / 4.2x energy gain for VGG-16 / GoogLeNet /
+MobileNet, up to 1.6x for LSTMs, up to 1.8x for MLPs, vs an Eyeriss-like
+C|K baseline at equal throughput; TOPs/W in the 0.35-1.85 range.
+"""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import cached_optimize_layer, network_energy
+from repro.core import ArraySpec
+from repro.core.networks import PAPER_BENCHMARKS
+from repro.core.optimizer import (
+    HardwareConfig,
+    candidate_hierarchies,
+    eyeriss_like,
+)
+
+ARR = ArraySpec(dims=(16, 16))
+
+
+def optimized_config(layers, beam: int = 10, two_level_rf: bool = True):
+    """Obs1+Obs2-pruned search over hierarchies, shared across layers."""
+    best = None
+    for hw in candidate_hierarchies(ARR, two_level_rf=two_level_rf):
+        try:
+            e = network_energy(layers, hw, beam)
+        except ValueError:
+            continue
+        if best is None or e < best[0]:
+            best = (e, hw)
+    return best
+
+
+def tops_per_watt(layers, hw, beam: int = 10, freq: float = 400e6) -> float:
+    cycles = sum(
+        cached_optimize_layer(n, hw, beam).report.cycles for n in layers
+    )
+    energy = network_energy(layers, hw, beam)
+    macs = sum(n.macs() for n in layers)
+    secs = cycles / freq
+    watts = energy * 1e-12 / secs
+    return (2 * macs / secs) / watts / 1e12
+
+
+def main(beam: int = 10, benchmarks=None):
+    base_hw = eyeriss_like()
+    names = benchmarks or list(PAPER_BENCHMARKS)
+    for name in names:
+        layers = PAPER_BENCHMARKS[name]()
+        base = network_energy(layers, base_hw, beam)
+        opt = optimized_config(layers, beam)
+        if opt is None:
+            print(f"fig14,{name},NO_FEASIBLE")
+            continue
+        e_opt, hw = opt
+        print(
+            f"fig14,{name},baseline={base/1e6:.0f}uJ,opt={e_opt/1e6:.0f}uJ,"
+            f"gain={base/e_opt:.2f}x,hw={hw.name},"
+            f"tops_w={tops_per_watt(layers, hw, beam):.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

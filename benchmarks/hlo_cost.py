@@ -1,0 +1,270 @@
+"""Hierarchical HLO cost analyzer - the dry-run "profiler".
+
+XLA's python cost_analysis() counts every while-loop body ONCE, which
+under-counts programs with nested scans (microbatch x layers x attention
+blocks x recurrence chunks) by orders of magnitude.  This module parses the
+compiled (post-SPMD, per-device) HLO text and rolls costs up through the
+call graph with loop trip counts:
+
+  flops:   dot = 2 * |result| * prod(lhs contracting dims)
+           elementwise arithmetic = |result|   (counts RWKV/RG-LRU work)
+           reduce/reduce-window = |operand|
+  bytes:   2 x result bytes per top-level op (one write + one subsequent
+           read; operands are some producer's result, so counting results
+           only avoids double counting).  Fusion interfaces count, fusion
+           internals do not - each fusion is one HBM-roundtrip kernel.
+           This is an HBM-traffic model: every inter-kernel tensor round-
+           trips HBM, which is how TPUs execute non-fused kernels.
+  coll:    result bytes per collective (x2 for all-reduce), same rollup
+
+  while(cond, body):  body cost x trip count; trip = max int constant in
+                      the cond computation (jax scans compare a counter
+                      against that constant)
+  fusion:  adds the fused computation's FLOPs (its ops execute) but not its
+           internal traffic
+  call / conditional: full cost (conditional: max over branches)
+
+Used by benchmarks/roofline.py on the .hlo.gz sidecars the dry-run writes;
+the same A/B (1-layer / 2-layer) reconstruction then scales to the full
+depth exactly.
+"""
+
+from __future__ import annotations
+
+import gzip
+import math
+import re
+from functools import lru_cache
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],{}: ]+?)\s)?([a-z][\w\-]*)\(")
+# param lists may contain nested parens (tuple-typed args): match greedily
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s+\(.*\)\s+->\s+.*\{")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "sqrt", "rsqrt", "negate", "abs",
+    "select", "compare", "and", "or", "xor", "exponential-minus-one",
+    "log-plus-one", "floor", "ceil", "round-nearest-afz", "sign",
+    "logistic", "cbrt", "atan2", "remainder", "clamp",
+}
+
+PLUMBING = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(segment: str) -> tuple[int, int]:
+    elems = nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[str]] = {}
+        self._entry = None
+        self._parse_computations(text)
+        self._shape_of: dict[tuple[str, str], str] = {}
+        self._index_shapes()
+        self._memo: dict[str, dict] = {}
+
+    # ------------------------------------------------------------- parsing --
+    def _parse_computations(self, text: str):
+        cur, buf = None, []
+        for line in text.splitlines():
+            m = _COMP_HEAD.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1).lstrip("%")
+                if line.lstrip().startswith("ENTRY"):
+                    self._entry = cur
+                buf = []
+                self.comps[cur] = buf
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                buf.append(line.rstrip())
+
+    def _index_shapes(self):
+        for cname, lines in self.comps.items():
+            for line in lines:
+                m = _INSTR_RE.match(line)
+                if not m:
+                    continue
+                name, rhs = m.group(1), m.group(2)
+                om = _OPCODE_RE.match(rhs)
+                if not om:
+                    continue
+                result_part = om.group(1) or ""
+                self._shape_of[(cname, name)] = result_part
+
+    # -------------------------------------------------------------- costs --
+    def _trip_count(self, cond_comp: str) -> int:
+        best = 1
+        for line in self.comps.get(cond_comp, ()):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                best = max(best, int(c))
+        return best
+
+    def _operand_bytes(self, cname: str, rhs: str, opcode: str) -> int:
+        """Bytes of named operands (looked up in the computation) plus any
+        inline-typed operands."""
+        call = rhs[rhs.index(opcode) + len(opcode):]
+        # take the top-level parenthesized arg list
+        depth = 0
+        args = ""
+        for ch in call:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        total = 0
+        # inline shapes in the arg list
+        _, b = _shape_elems_bytes(args)
+        total += b
+        # named operands
+        for nm in re.findall(r"%[\w.\-]+", args):
+            seg = self._shape_of.get((cname, nm))
+            if seg:
+                _, bb = _shape_elems_bytes(seg)
+                total += bb
+        return total
+
+    def computation_cost(self, cname: str) -> dict:
+        if cname in self._memo:
+            return self._memo[cname]
+        flops = 0.0
+        nbytes = 0.0
+        coll = {c: 0.0 for c in COLLECTIVES}
+        self._memo[cname] = {
+            "flops": 0.0, "bytes": 0.0, "coll": dict(coll)
+        }  # cycle guard
+        for line in self.comps.get(cname, ()):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            om = _OPCODE_RE.match(rhs)
+            if not om:
+                continue
+            result_part, opcode = om.group(1) or "", om.group(2)
+            res_elems, res_bytes = _shape_elems_bytes(result_part)
+
+            if opcode == "while":
+                cm = re.search(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)", rhs)
+                if cm:
+                    trip = self._trip_count(cm.group(1).lstrip("%"))
+                    sub = self.computation_cost(cm.group(2).lstrip("%"))
+                    flops += trip * sub["flops"]
+                    nbytes += trip * sub["bytes"]
+                    for c in COLLECTIVES:
+                        coll[c] += trip * sub["coll"][c]
+                continue
+            if opcode == "fusion":
+                cm = re.search(r"calls=(%[\w.\-]+)", rhs)
+                if cm:
+                    sub = self.computation_cost(cm.group(1).lstrip("%"))
+                    flops += sub["flops"]  # internal flops execute
+                nbytes += 2 * res_bytes
+                continue
+            if opcode in ("call", "async-start"):
+                cm = re.search(r"to_apply=(%[\w.\-]+)", rhs)
+                if cm:
+                    sub = self.computation_cost(cm.group(1).lstrip("%"))
+                    flops += sub["flops"]
+                    nbytes += sub["bytes"]
+                    for c in COLLECTIVES:
+                        coll[c] += sub["coll"][c]
+                continue
+            if opcode == "conditional":
+                branches = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+                if branches:
+                    subs = [
+                        self.computation_cost(b.strip().lstrip("%"))
+                        for b in branches.group(1).split(",")
+                    ]
+                    if subs:
+                        best = max(subs, key=lambda s: s["flops"])
+                        flops += best["flops"]
+                        nbytes += best["bytes"]
+                continue
+
+            base = opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                mult = 2.0 if base == "all-reduce" else 1.0
+                coll[base] += mult * res_bytes
+                nbytes += res_bytes
+                continue
+            if opcode in PLUMBING or opcode.endswith("-done"):
+                continue
+
+            if opcode == "dot":
+                lhs = re.search(r"\((%[\w.\-]+|[^,)]+)", rhs[rhs.index("dot("):])
+                contract = 1
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                lhs_nm = re.findall(r"%[\w.\-]+", rhs.split("dot(", 1)[1])
+                lhs_seg = (
+                    self._shape_of.get((cname, lhs_nm[0])) if lhs_nm else None
+                )
+                if cm and lhs_seg:
+                    dims_m = _SHAPE_RE.search(lhs_seg)
+                    if dims_m:
+                        lhs_dims = [
+                            int(d) for d in dims_m.group(2).split(",") if d
+                        ]
+                        for idx in cm.group(1).split(","):
+                            if idx:
+                                contract *= lhs_dims[int(idx)]
+                flops += 2.0 * res_elems * contract
+            elif opcode in ELEMENTWISE:
+                flops += res_elems
+            elif opcode in ("reduce", "reduce-window"):
+                ob = self._operand_bytes(cname, rhs, opcode)
+                flops += ob / 4.0  # ~1 flop per operand element (fp32-ish)
+                nbytes += ob  # reductions read far more than they write
+
+            nbytes += 2 * res_bytes
+
+        out = {"flops": flops, "bytes": nbytes, "coll": coll}
+        self._memo[cname] = out
+        return out
+
+    def entry_cost(self) -> dict:
+        assert self._entry, "no ENTRY computation found"
+        c = self.computation_cost(self._entry)
+        c = dict(c)
+        c["coll"] = dict(c["coll"])
+        c["coll"]["total"] = sum(c["coll"][k] for k in COLLECTIVES)
+        return c
+
+
+def cost_of_file(path: str) -> dict:
+    with gzip.open(path, "rt") as f:
+        return HloCost(f.read()).entry_cost()

@@ -1,0 +1,64 @@
+"""§Perf helper: compare variant dry-run records against the baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare \
+        --cell grok-1-314b train_4k 16x16 [--tag dots]
+
+Prints the three roofline terms before/after plus deltas - the measurement
+step of the hypothesis -> change -> measure loop.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze_record
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return analyze_record(json.load(f), path)
+
+
+def compare(base: dict, var: dict) -> str:
+    lines = [
+        f"cell: {base['arch']} x {base['shape']} x {base['mesh']}",
+        f"{'term':<14}{'baseline':>12}{'variant':>12}{'delta':>9}",
+    ]
+    for term in ("compute_s", "memory_s", "collective_s"):
+        b, v = base[term], var[term]
+        d = (v - b) / b * 100 if b else float("nan")
+        lines.append(f"{term:<14}{b:>12.3e}{v:>12.3e}{d:>8.1f}%")
+    lines.append(
+        f"{'rf':<14}{base['roofline_fraction']:>12.3f}"
+        f"{var['roofline_fraction']:>12.3f}"
+    )
+    lines.append(
+        f"{'useful':<14}{base['useful_ratio']:>12.3f}"
+        f"{var['useful_ratio']:>12.3f}"
+    )
+    lines.append(
+        f"{'peakGiB':<14}{base['peak_gib']:>12.2f}{var['peak_gib']:>12.2f}"
+    )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", nargs=3, metavar=("ARCH", "SHAPE", "MESH"),
+                    required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    arch, shape, mesh = args.cell
+    base = load(os.path.join(args.dir, f"{arch}__{shape}__{mesh}.json"))
+    var = load(
+        os.path.join(args.dir, f"{arch}__{shape}__{mesh}__{args.tag}.json")
+    )
+    print(compare(base, var))
+
+
+if __name__ == "__main__":
+    main()

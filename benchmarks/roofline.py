@@ -1,0 +1,215 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads experiments/dryrun/*.json (written by launch/dryrun.py) and derives,
+per cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw              [s]
+    collective term = collective_bytes_per_device / (links*ICI)  [s]
+
+plus MODEL_FLOPS (analytic 6*N*D / 2*N*D + attention) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPS_total, the dominant bottleneck, and a
+suggestion for what would move it.  The "roofline fraction" reported in
+EXPERIMENTS.md §Perf is compute_term / max(all terms): 1.0 means perfectly
+compute-bound (the roofline ideal for these workloads).
+
+Hardware constants (TPU v5e, from the task sheet): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI; we assume 2 usable ICI links per chip
+(one ring per mesh axis of the 2D torus).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_PER_LINK = 50e9
+ICI_LINKS = 2
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole step (all devices)."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    N = cfg.active_params_count()
+    d_attn = cfg.n_heads * cfg.resolved_head_dim
+    S, B = shape.seq_len, shape.global_batch
+
+    # attention context FLOPs (QK^T + PV = 4 * tokens * kv_len * d_attn),
+    # causal prefill halves kv_len on average; window layers clamp it.
+    def attn_flops(tokens: int, kv_len: float) -> float:
+        n_attn = cfg.n_layers if cfg.mixer == "attention" else 0
+        if cfg.family == "hybrid":
+            n_attn = cfg.n_layers // (cfg.rnn_per_attention + 1)
+        win = cfg.sliding_window
+        if cfg.global_every and win:
+            ge = cfg.global_every
+            n_glob = cfg.n_layers // ge
+            n_loc = n_attn - n_glob
+            return 4.0 * tokens * d_attn * (
+                n_glob * kv_len + n_loc * min(kv_len, win)
+            )
+        if win:
+            kv_len = min(kv_len, win)
+        return 4.0 * tokens * d_attn * n_attn * kv_len
+
+    if shape.kind == "train":
+        tokens = B * S
+        f = 6.0 * N * tokens + 3.0 * attn_flops(tokens, S / 2)
+    elif shape.kind == "prefill":
+        tokens = B * S
+        f = 2.0 * N * tokens + attn_flops(tokens, S / 2)
+        if cfg.family == "encdec":
+            f += 2.0 * N * B * cfg.encoder_seq
+    else:  # decode: one token per sequence
+        tokens = B
+        f = 2.0 * N * tokens + attn_flops(tokens, S)
+        if cfg.family == "encdec":
+            f += 4.0 * tokens * d_attn * cfg.n_layers * cfg.encoder_seq
+    return f
+
+
+def hlo_costs(rec: dict, json_path: str) -> dict | None:
+    """Exact per-device totals from the .hlo.gz sidecars via the
+    hierarchical cost parser (benchmarks/hlo_cost.py); memoized into the
+    record file under 'hlo_cost'."""
+    if "hlo_cost" in rec:
+        return rec["hlo_cost"]
+    from benchmarks.hlo_cost import cost_of_file
+
+    c1p = json_path.replace(".json", ".c1.hlo.gz")
+    c2p = json_path.replace(".json", ".c2.hlo.gz")
+    if not (os.path.exists(c1p) and os.path.exists(c2p)):
+        return None
+    c1, c2 = cost_of_file(c1p), cost_of_file(c2p)
+    units = rec["scan_units"]
+    out = {
+        "flops": c1["flops"] + (c2["flops"] - c1["flops"]) * (units - 1),
+        "bytes": c1["bytes"] + (c2["bytes"] - c1["bytes"]) * (units - 1),
+        "coll": {
+            k: c1["coll"][k] + (c2["coll"][k] - c1["coll"][k]) * (units - 1)
+            for k in c1["coll"]
+        },
+    }
+    rec["hlo_cost"] = out
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return out
+
+
+def analyze_record(rec: dict, json_path: str | None = None) -> dict:
+    n_dev = rec["n_devices"]
+    hc = hlo_costs(rec, json_path) if json_path else rec.get("hlo_cost")
+    if hc:
+        flops_dev = hc["flops"]
+        bytes_dev = hc["bytes"]
+        coll_dev = hc["coll"]["total"]
+    else:  # fall back to the (scan-body-once) XLA numbers
+        flops_dev = rec["cost_per_device"]["flops"]
+        bytes_dev = rec["cost_per_device"]["bytes"]
+        coll_dev = rec["collective_bytes_per_device"]["total"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / (ICI_LINKS * ICI_PER_LINK)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dom = max(terms, key=lambda k: terms[k])
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops_dev * n_dev
+    ratio = mf / hlo_total if hlo_total else float("nan")
+    frac = compute_s / max(max(terms.values()), 1e-30)
+    suggestion = {
+        "compute": "compute-bound: reduce recompute (remat policy) or pad "
+                   "waste; already near roofline",
+        "memory": "HBM-bound: increase arithmetic intensity (bigger tiles, "
+                  "fused kernels, larger per-device batch)",
+        "collective": "ICI-bound: reshard to cut gather/reduce volume, "
+                      "overlap collectives with compute, or compress",
+    }[dom]
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind")},
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dom,
+        "roofline_fraction": frac,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": ratio,
+        "peak_gib": rec["memory"]["peak_estimate_bytes"] / 2**30,
+        "suggestion": suggestion,
+    }
+
+
+def load_all(
+    dryrun_dir: str = "experiments/dryrun", include_variants: bool = False
+) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not include_variants and (rec.get("overrides") or rec.get("rules")):
+            continue  # §Perf variant records: baselines only by default
+        out.append(analyze_record(rec, path))
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| bound | roofline frac | useful ratio | peak GiB/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    body = ""
+    for r in rows:
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {r['peak_gib']:.2f} |\n"
+        )
+    return hdr + body
+
+
+def pick_hillclimb_cells(rows: list[dict]) -> dict[str, dict]:
+    """worst roofline fraction / most collective-bound / paper-representative
+    (the MoE train cell: dataflow-choice = expert placement, the paper's
+    spatial-unrolling question at pod scale)."""
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    worst = min(single, key=lambda r: r["roofline_fraction"])
+    coll = max(single, key=lambda r: r["collective_s"])
+    rep = next(
+        (r for r in single
+         if r["arch"] == "grok-1-314b" and r["shape"] == "train_4k"),
+        single[0],
+    )
+    return {"worst_roofline": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        print("roofline,no_dryrun_records_found")
+        return
+    print(markdown_table(rows))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_baseline.md", "w") as f:
+        f.write(markdown_table(rows))
+    picks = pick_hillclimb_cells(rows)
+    for tag, r in picks.items():
+        print(
+            f"hillclimb_pick,{tag},{r['arch']},{r['shape']},"
+            f"dominant={r['dominant']},frac={r['roofline_fraction']:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Benchmark driver: one section per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Default mode runs reduced
+budgets suitable for CI; ``--full`` reproduces the paper-scale sweeps
+(hours on one CPU core).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8,fig14]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def run_validation(full: bool):
+    from benchmarks import validation
+
+    _, us = _timed(validation.main)
+    print(f"validation_total,{us:.0f},model==simulator")
+
+
+def run_fig8(full: bool):
+    from benchmarks import fig8_dataflow
+
+    layers = ("conv3", "4c3r") if full else ("conv3",)
+    for layer in layers:
+        rows, us = _timed(fig8_dataflow.run, layer, 16, 12 if full else 6)
+        for row in rows:
+            print(
+                f"fig8_{layer}_{row['hw']},{us/len(rows):.0f},"
+                f"median/best={row['median_over_best']:.2f};"
+                f"within2x={row['frac_within_2x']:.2f};n={row['n_dataflows']}"
+            )
+
+
+def run_fig9(full: bool):
+    from benchmarks import fig9_utilization
+
+    _, us = _timed(fig9_utilization.main)
+    print(f"fig9_total,{us:.0f},replication_restores_utilization")
+
+
+def run_fig10(full: bool):
+    from benchmarks import fig10_blocking
+
+    r, us = _timed(fig10_blocking.run, 1500 if full else 400)
+    print(
+        f"fig10,{us:.0f},within1.25x={r['frac_within_125']:.2f};"
+        f"spread={r['spread']:.1f}x;min={r['min_uj']:.0f}uJ"
+    )
+
+
+def run_fig12(full: bool):
+    from benchmarks import fig12_memory
+
+    rows, us = _timed(fig12_memory.rf_sweep, 12 if full else 8)
+    base = next(e for rf, bk, e in rows if rf == 512 and bk == 128)
+    best = min(rows, key=lambda r: r[2])
+    print(
+        f"fig12,{us:.0f},best=rf{best[0]}B+buf{best[1]}KB;"
+        f"gain_vs_eyeriss={base/best[2]:.2f}x"
+    )
+    (e1, e2), us2 = _timed(fig12_memory.two_level_rf, 12 if full else 8)
+    print(f"fig12_two_level_rf,{us2:.0f},gain={e1/e2:.2f}x")
+
+
+def run_fig13(full: bool):
+    from benchmarks import fig13_scaling
+
+    rows, us = _timed(fig13_scaling.run, 10 if full else 6)
+    derived = ";".join(
+        f"pe{n}:rf{b[1]}B+buf{b[2]//1024}KB" for n, b in rows
+    )
+    print(f"fig13,{us:.0f},{derived}")
+
+
+def run_fig14(full: bool):
+    from benchmarks import fig14_optimizer
+    from repro.core.networks import PAPER_BENCHMARKS
+
+    names = list(PAPER_BENCHMARKS) if full else ["alexnet", "lstm_m", "mlp_m"]
+    _, us = _timed(fig14_optimizer.main, 10 if full else 6, names)
+    print(f"fig14_total,{us:.0f},optimizer_gains_above")
+
+
+def run_roofline(full: bool):
+    from benchmarks import roofline
+
+    rows, us = _timed(roofline.load_all)
+    if not rows:
+        print("roofline,0,no_dryrun_records(run launch/dryrun first)")
+        return
+    import os
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_baseline.md", "w") as f:
+        f.write(roofline.markdown_table(rows))
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    n_cb = sum(1 for r in rows if r["dominant"] == "compute")
+    print(
+        f"roofline,{us:.0f},cells={len(rows)};compute_bound={n_cb};"
+        f"worst={worst['arch']}/{worst['shape']}@{worst['roofline_fraction']:.2f}"
+    )
+
+
+def run_kernels(full: bool):
+    """Micro-bench the Pallas kernels (interpret mode wall time is NOT TPU
+    perf - recorded for regression tracking only)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.matmul.ops import matmul
+    from repro.kernels.matmul.ref import matmul_ref
+
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (256, 256), jnp.float32)
+    b = jax.random.normal(key, (256, 256), jnp.float32)
+    _, us = _timed(lambda: jax.block_until_ready(matmul(a, b)))
+    _, us_ref = _timed(lambda: jax.block_until_ready(matmul_ref(a, b)))
+    print(f"kernel_matmul_256_interp,{us:.0f},ref_us={us_ref:.0f}")
+
+
+SECTIONS = {
+    "validation": run_validation,
+    "fig8": run_fig8,
+    "fig9": run_fig9,
+    "fig10": run_fig10,
+    "fig12": run_fig12,
+    "fig13": run_fig13,
+    "fig14": run_fig14,
+    "roofline": run_roofline,
+    "kernels": run_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+    for name, fn in SECTIONS.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(args.full)
+        except Exception as e:  # keep the suite running
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

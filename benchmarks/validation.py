@@ -1,0 +1,77 @@
+"""Fig 7 analogue: analytical model vs the exact simulator.
+
+The paper validated its analytical model against post-synthesis ASIC designs
+(<2% error).  Our oracle is the exact tile-granular simulator; agreement is
+exact on divisible schedules by construction, which we demonstrate here on
+the paper's own Table-4-style design points (OS4, OS8, WS16 analogues).
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    ArraySpec,
+    MemLevel,
+    Schedule,
+    analyze,
+    conv_nest,
+    evaluate,
+    make_dataflow,
+    simulate,
+)
+from repro.core.blocking import search_blocking
+
+
+def table4_designs():
+    """OS4/OS8 (1D output-stationary) and WS16 (2D C|K) reduced design
+    points from paper Table 4, on a small CONV layer."""
+    nest = conv_nest("t", B=4, K=16, C=16, X=8, Y=8, FX=3, FY=3)
+    designs = []
+    for name, arr_dims, primary, rf, sram in (
+        ("OS4", (4,), ("X",), 32, 32 * 1024),
+        ("OS8", (8,), ("X",), 64, 64 * 1024),
+        ("WS16", (4, 4), ("C", "K"), 64, 32 * 1024),
+    ):
+        arr = ArraySpec(dims=arr_dims)
+        df = make_dataflow(nest, arr, primary, replication=False)
+        levels = (
+            MemLevel("RF", rf, double_buffered=False, per_pe=True),
+            MemLevel("BUF", sram),
+            MemLevel("DRAM", None),
+        )
+        res = search_blocking(nest, levels, arr, df, beam=8)
+        designs.append((name, res.best.schedule))
+    return designs
+
+
+def main():
+    for name, sched in table4_designs():
+        a = analyze(sched)
+        # simulator handles temporal loops; fold spatial out for the check
+        import dataclasses
+
+        from repro.core.schedule import ArraySpec as AS
+
+        temporal = dataclasses.replace(
+            sched,
+            tiling={
+                d: tuple(
+                    f * (sched.spatial_factor(d) if i == len(sched.levels) - 1 else 1)
+                    for i, f in enumerate(sched.tiling[d])
+                )
+                for d in sched.nest.dims
+            },
+            array=AS(dims=(1,)),
+            spatial=((),),
+        )
+        s = simulate(temporal)
+        a2 = analyze(temporal)
+        match = a2.reads == s.reads and a2.writes == s.writes
+        rep = evaluate(sched)
+        print(
+            f"validation,{name},model_vs_sim={'exact' if match else 'MISMATCH'},"
+            f"energy={rep.energy_pj/1e3:.1f}nJ,util={rep.utilization:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Serving example: batched requests through the prefill+decode engine.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.arch.model_zoo import build
+from repro.configs.registry import get
+from repro.serve.engine import Engine, Request, ServeConfig
+
+
+def main():
+    cfg = get("smollm-360m-smoke")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, ServeConfig(batch=4, max_len=128))
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(rng.integers(0, cfg.vocab, n).astype(np.int32),
+                max_new_tokens=m)
+        for n, m in ((5, 8), (12, 16), (3, 4))
+    ]
+    outs = engine.generate(requests)
+    for i, out in enumerate(outs):
+        print(f"request {i}: prompt_len={len(requests[i].prompt)} "
+              f"generated={out.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Attention compute paths.
+
+Three implementations with one contract:
+
+  * dense       — einsum + softmax, for short sequences (scores materialize).
+  * blockwise   — lax.scan over (q-block, kv-block) tiles with online softmax
+                  (flash-attention algorithm in portable XLA).  This is the
+                  default for long sequences; it is also the pure-jnp oracle
+                  shape for the Pallas kernel in kernels/flash_attention.
+  * Pallas      — kernels/flash_attention (TPU target); opt-in via ops.py.
+
+All paths take grouped-query tensors:
+    q: (B, Tq, KV, G, hd)   k/v: (B, Tk, KV, hd)
+and an additive mask recipe (causal flag + optional sliding window + kv
+length for padded decode caches), and return (B, Tq, KV, G, hd).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _bias_block(
+    q_pos: jax.Array,   # (bq,)
+    k_pos: jax.Array,   # (bk,)
+    causal: bool,
+    window: int | None,
+    kv_len: jax.Array | None,
+) -> jax.Array:
+    diff = q_pos[:, None].astype(jnp.int32) - k_pos[None, :].astype(jnp.int32)
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    if kv_len is not None:
+        ok &= k_pos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    B, Tq, KV, G, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    scores = scores + _bias_block(q_pos, k_pos, causal, window, kv_len)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: jax.Array | None = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+    causal_skip: bool = False,
+) -> jax.Array:
+    """Online-softmax tiled attention; O(block_q*block_k) live scores.
+
+    causal_skip (§Perf): unrolls the q-block loop and statically truncates
+    each q block's kv scan to the causal frontier - halves prefill attention
+    FLOPs vs. computing fully-masked blocks.  Requires aligned positions
+    (q_pos == k_pos == arange), which the caller guarantees.
+    """
+    B, Tq, KV, G, hd = q.shape
+    Tk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    # pad to multiples (padded keys masked off via kv_len/k_pos handling)
+    pq = (-Tq) % bq
+    pk = (-Tk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pq), constant_values=q_pos[-1])
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pk), constant_values=-(10**9))
+    nq, nk = q.shape[1] // bq, k.shape[1] // bk
+
+    qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, bk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, bk, KV, hd).transpose(1, 0, 2, 3, 4)
+    qpb = q_pos.reshape(nq, bq)
+    kpb = k_pos.reshape(nk, bk)
+
+    @jax.checkpoint
+    def q_block(qi, qp, kbs, vbs, kps):
+        """One q block against a stack of kv blocks (kbs: (n,B,bk,KV,hd))."""
+
+        # checkpointed: the backward pass recomputes each block's scores
+        # instead of stacking (bq x bk) probability residuals per step -
+        # this IS the flash-attention backward, expressed with remat.
+        @jax.checkpoint
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            ki, vi, kp = kv_in
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki).astype(jnp.float32)
+            s = s * scale + _bias_block(qp, kp, causal, window, kv_len)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(qi.dtype), vi
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kbs, vbs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(qi.dtype)  # (B,KV,G,bq,hd)
+
+    if causal_skip and causal:
+        # static causal frontier per q block (positions are aligned aranges)
+        blocks = []
+        for i in range(nq):
+            hi = min(nk, ((i + 1) * bq + bk - 1) // bk)
+            blocks.append(
+                q_block(qb[i], qpb[i], kb[:hi], vb[:hi], kpb[:hi])
+            )
+        ob = jnp.stack(blocks)
+    else:
+        def q_step(_, q_in):
+            qi, qp = q_in
+            return None, q_block(qi, qp, kb, vb, kpb)
+
+        _, ob = jax.lax.scan(q_step, None, (qb, qpb))
+    # ob: (nq, B, KV, G, bq, hd) -> (B, nq, bq, KV, G, hd) -> (B, T, ...)
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, KV, G, hd)
+    return out[:, :Tq]
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: jax.Array | None = None,
+    dense_threshold: int = 2048 * 2048,
+    causal_skip: bool = False,
+) -> jax.Array:
+    """Dispatch dense vs blockwise by live-score size."""
+    Tq, Tk = q.shape[1], k.shape[1]
+    if Tq * Tk <= dense_threshold:
+        return dense_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+            kv_len=kv_len,
+        )
+    return blockwise_attention(
+        q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+        kv_len=kv_len, causal_skip=causal_skip,
+    )

@@ -1,0 +1,140 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment spec the conv/mel frontend is a STUB: `input_specs`
+provides precomputed frame embeddings (B, T_enc, d_model).  The encoder is a
+bidirectional transformer over frames; the decoder is a causal transformer
+with cross-attention into the encoder output.  Decode shapes exercise the
+decoder's self-attention KV cache (cross K/V are computed from the cached
+encoder output).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.arch import layers as L
+from repro.configs.base import ModelConfig
+
+
+def enc_block_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg),
+    }
+
+
+def dec_block_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "self_attn": L.attention_init(ks[0], cfg),
+        "ln_x": L.rmsnorm_init(cfg.d_model),
+        "cross_attn": L.attention_init(ks[1], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[2], cfg),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecModel:
+    cfg: ModelConfig
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        ke, k1, k2 = jax.random.split(key, 3)
+        ekeys = jax.random.split(k1, cfg.encoder_layers)
+        dkeys = jax.random.split(k2, cfg.n_layers)
+        return {
+            "embed": L.embedding_init(ke, cfg),
+            "enc_layers": jax.vmap(lambda k: enc_block_init(k, cfg))(ekeys),
+            "dec_layers": jax.vmap(lambda k: dec_block_init(k, cfg))(dkeys),
+            "enc_ln": L.rmsnorm_init(cfg.d_model),
+            "final_ln": L.rmsnorm_init(cfg.d_model),
+        }
+
+    def encode(self, params: dict, frames: jax.Array, remat: bool = False):
+        """frames: (B, T_enc, D) precomputed embeddings (frontend stub)."""
+        cfg = self.cfg
+
+        def body(x, p):
+            h, _ = L.multihead_attention(
+                p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                causal=False,
+            )
+            x = x + h
+            f = L.mlp(p["mlp"], cfg, L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            return x + f, None
+
+        if remat:
+            from repro.arch.transformer import remat_policy_of
+
+            body = jax.checkpoint(body, policy=remat_policy_of(cfg))
+        x, _ = jax.lax.scan(body, frames, params["enc_layers"])
+        return L.rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+    def _decoder(
+        self, params, x, enc_out, positions, caches, remat: bool
+    ):
+        cfg = self.cfg
+
+        def body(x, p_c):
+            p, c = p_c
+            h, nc = L.multihead_attention(
+                p["self_attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                positions=positions, causal=True, cache=c,
+            )
+            x = x + h
+            h, _ = L.multihead_attention(
+                p["cross_attn"], cfg, L.rmsnorm(p["ln_x"], x, cfg.norm_eps),
+                kv_x=enc_out, causal=False, use_rope=False,
+            )
+            x = x + h
+            f = L.mlp(p["mlp"], cfg, L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            return x + f, nc
+
+        if remat:
+            from repro.arch.transformer import remat_policy_of
+
+            body = jax.checkpoint(body, policy=remat_policy_of(cfg))
+        x, ncaches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+        return x, ncaches
+
+    def loss(
+        self, params: dict, frames: jax.Array, tokens: jax.Array,
+        labels: jax.Array, remat: bool = True,
+    ) -> jax.Array:
+        cfg = self.cfg
+        enc_out = self.encode(params, frames, remat=remat)
+        x = L.embed(params["embed"], tokens)
+        x, _ = self._decoder(params, x, enc_out, None, None, remat)
+        logits = L.unembed(params["embed"], L.rmsnorm(params["final_ln"], x, cfg.norm_eps))
+        return L.cross_entropy(logits, labels)
+
+    def init_caches(self, batch: int, max_len: int) -> Any:
+        per = [
+            L.init_kv_cache(self.cfg, batch, max_len)
+            for _ in range(self.cfg.n_layers)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    def prefill(self, params, frames, tokens, caches):
+        enc_out = self.encode(params, frames)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x = L.embed(params["embed"], tokens)
+        x, caches = self._decoder(params, x, enc_out, positions, caches, False)
+        x = L.rmsnorm(params["final_ln"], x, self.cfg.norm_eps)
+        return L.unembed(params["embed"], x)[:, -1], (caches, enc_out)
+
+    def decode_step(self, params, tokens, state):
+        caches, enc_out = state
+        x = L.embed(params["embed"], tokens)
+        x, caches = self._decoder(params, x, enc_out, None, caches, False)
+        x = L.rmsnorm(params["final_ln"], x, self.cfg.norm_eps)
+        return L.unembed(params["embed"], x)[:, -1], (caches, enc_out)

@@ -1,0 +1,13 @@
+"""build(config) -> model object (Model or EncDecModel)."""
+
+from __future__ import annotations
+
+from repro.arch.encdec import EncDecModel
+from repro.arch.transformer import Model
+from repro.configs.base import ModelConfig
+
+
+def build(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return Model(cfg)

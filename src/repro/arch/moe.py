@@ -1,0 +1,124 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+Dispatch is the sort/scatter formulation (no (tokens x experts x capacity)
+one-hot blow-up): flatten tokens, route top-k, rank tokens within their
+expert via a sort, scatter into an (E * C, D) buffer, run the batched expert
+FFN as one einsum over the stacked expert weights, and combine with gather +
+gate weighting.  Tokens over capacity are dropped (standard Switch-style).
+
+Sharding: expert weights are stacked (E, D, F) so the FFN hidden dim F can be
+tensor-parallel over the 'model' axis and the stack FSDP-sharded over 'data';
+tokens stay on their data shard (no all-to-all in the baseline plan).  An
+expert-parallel all_to_all variant is evaluated in the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    d, e, f = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_expert
+    sd = jnp.dtype(cfg.dtype)
+    init = partial(jax.nn.initializers.normal(0.02 / math.sqrt(d)), dtype=sd)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.nn.initializers.normal(0.02, dtype=jnp.float32)(
+            ks[0], (d, e)
+        ),
+        "w_in": init(ks[1], (e, d, f)),
+        "w_out": init(ks[2], (e, f, d)),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = init(ks[3], (e, d, f))
+    return p
+
+
+def moe_apply(
+    params: dict, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Dispatch is PER ROW (per sequence): every row routes its own S*K
+    assignments into its own (E, C_row) capacity slots.  With the batch dim
+    sharded over the data axis this keeps routing, scatter, expert compute
+    and combine entirely shard-local - the naive flat-token formulation made
+    XLA replicate the dispatch buffer and all-reduce fp32 expert-activation
+    gradients across the data axis every microbatch (§Perf, grok hillclimb:
+    the single largest collective in the baseline profile).
+    """
+    assert cfg.moe is not None
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    SK = S * K
+
+    from repro.parallel.policy import shard
+
+    logits = (x.astype(jnp.float32) @ params["router"])   # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)       # (B, S, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch): E * <f_e * p_e>
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    ) / K
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, int(math.ceil(SK * cfg.moe.capacity_factor / E)))
+
+    # rank within expert, per row
+    flat_e = expert_ids.reshape(B, SK)
+    sort_idx = jnp.argsort(flat_e, axis=1)
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=1)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts          # (B, E)
+    rank = (
+        jnp.arange(SK, dtype=jnp.int32)[None, :]
+        - jnp.take_along_axis(starts, sorted_e, axis=1)
+    )
+    keep = rank < C
+    slot = sorted_e * C + jnp.minimum(rank, C - 1)        # (B, SK)
+    token_of = sort_idx // K                              # (B, SK)
+
+    rows = jnp.arange(B)[:, None]
+    vals = jnp.where(
+        keep[..., None],
+        jnp.take_along_axis(x, token_of[..., None], axis=1),
+        0,
+    )
+    dispatched = jnp.zeros((B, E * C, D), x.dtype).at[rows, slot].set(vals)
+    de = shard(
+        dispatched.reshape(B, E, C, D), "batch", "expert", None, "embed"
+    )
+
+    h = jnp.einsum("becd,edf->becf", de, params["w_in"])
+    h = shard(h, "batch", "expert", None, "ff")
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", de, params["w_gate"])
+        h = jax.nn.silu(shard(g, "batch", "expert", None, "ff")) * h
+    else:
+        h = jax.nn.gelu(h)
+    eo = jnp.einsum("becf,efd->becd", h, params["w_out"])
+    eo = shard(eo, "batch", "expert", None, "embed").reshape(B, E * C, D)
+
+    gathered = eo[rows, slot]                              # (B, SK, D)
+    w = jnp.where(
+        keep,
+        jnp.take_along_axis(gate_vals.reshape(B, SK), sort_idx, axis=1),
+        0.0,
+    )
+    out = jnp.zeros((B, S, D), jnp.float32)
+    out = out.at[rows, token_of].add(
+        gathered.astype(jnp.float32) * w[..., None]
+    )
+    return out.astype(x.dtype), aux

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_i x_t) * x_t)
+
+wrapped in the Griffin recurrent block:
+    y = GeLU(W_y x)  ;  z = conv1d(W_x x)  ;  z = RG-LRU(z)
+    out = W_o (y * z)
+
+Chunked scan with remat, same memory strategy as rwkv.wkv_scan; the Pallas
+kernels/linear_scan implements the diagonal recurrence on TPU.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+RGLRU_C = 8.0
+
+
+def rglru_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    sd = jnp.dtype(cfg.dtype)
+    init = partial(jax.nn.initializers.normal(0.02 / math.sqrt(d)), dtype=sd)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_y": init(ks[0], (d, w)),
+        "w_x": init(ks[1], (d, w)),
+        "conv": jax.nn.initializers.normal(0.02, dtype=sd)(
+            ks[2], (cfg.conv1d_width, w)
+        ),
+        "w_a": init(ks[3], (w, w)),
+        "w_i": init(ks[4], (w, w)),
+        # Lambda init so that a^c spans (0.9, 0.999), Griffin appendix
+        "lam": jnp.linspace(0.9, 4.0, w, dtype=jnp.float32),
+        "w_o": init(ks[5], (w, d)),
+    }
+
+
+def _causal_conv1d(
+    z: jax.Array, kernel: jax.Array, prev: jax.Array | None
+) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. z: (B,T,W), kernel: (K,W).
+    prev: (B,K-1,W) history for decode; returns (out, new history)."""
+    B, T, Wd = z.shape
+    K = kernel.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, Wd), z.dtype)
+    zp = jnp.concatenate([prev, z], axis=1)
+    out = jnp.zeros_like(z)
+    for i in range(K):
+        out = out + zp[:, i : i + T] * kernel[K - 1 - i]
+    return out, zp[:, -(K - 1):]
+
+
+def rglru_scan(
+    a: jax.Array, gx: jax.Array, h0: jax.Array, chunk: int = 64
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*gx_t ; a,gx: (B,T,W) fp32."""
+    B, T, Wd = a.shape
+    pad = (-T) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+    nc = a.shape[1] // chunk
+    ac = a.reshape(B, nc, chunk, Wd).transpose(1, 2, 0, 3)
+    gc = gx.reshape(B, nc, chunk, Wd).transpose(1, 2, 0, 3)
+
+    @jax.checkpoint
+    def chunk_step(h, xs):
+        aa, gg = xs
+
+        def step(h, x):
+            at, gt = x
+            h = at * h + jnp.sqrt(jnp.maximum(1.0 - at * at, 0.0)) * gt
+            return h, h
+
+        return jax.lax.scan(step, h, (aa, gg))
+
+    h, out = jax.lax.scan(chunk_step, h0, (ac, gc))
+    out = out.reshape(nc * chunk, B, Wd).transpose(1, 0, 2)
+    return out[:, :T], h
+
+
+def rglru_block(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                  # (B, T, D)
+    cache: dict | None = None,     # {"h": (B,W), "conv": (B,K-1,W)}
+) -> tuple[jax.Array, dict | None]:
+    B, T, D = x.shape
+    y = jax.nn.gelu(x @ params["w_y"])
+    z = x @ params["w_x"]
+    z, conv_hist = _causal_conv1d(
+        z, params["conv"], cache["conv"] if cache is not None else None
+    )
+    zf = z.astype(jnp.float32)
+    log_a = (
+        -RGLRU_C
+        * jax.nn.softplus(params["lam"])
+        * jax.nn.sigmoid(zf @ params["w_a"].astype(jnp.float32))
+    )
+    a = jnp.exp(log_a)
+    gate_in = jax.nn.sigmoid(zf @ params["w_i"].astype(jnp.float32)) * zf
+    h0 = (
+        cache["h"]
+        if cache is not None
+        else jnp.zeros((B, a.shape[-1]), jnp.float32)
+    )
+    out, h = rglru_scan(a, gate_in, h0)
+    out = out.astype(x.dtype) * y
+    res = out @ params["w_o"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h, "conv": conv_hist}
+    return res, new_cache
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), jnp.dtype(cfg.dtype)),
+    }

@@ -1,0 +1,167 @@
+"""RWKV-6 (Finch) token mixing: data-dependent decay WKV recurrence.
+
+Per head (key dim Dk, value dim Dv), with state S in R^{Dk x Dv}:
+
+    o_t = r_t . (S_{t-1} + u (x) (k_t v_t^T))
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    w_t = exp(-exp(w0 + tanh(x_w A) B))        (the Finch data-dependent decay)
+
+Training/prefill runs a chunked scan (remat inside each chunk) so the
+backward pass stores only chunk-boundary states; decode updates the state
+one token at a time.  kernels/linear_scan implements the same recurrence as
+a Pallas TPU kernel; this module is its semantic reference.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+HEAD_K = 64  # RWKV-6 uses 64-dim heads
+
+LORA_R = 64
+
+
+def rwkv_head_count(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_K
+
+
+def rwkv_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = rwkv_head_count(cfg)
+    sd = jnp.dtype(cfg.dtype)
+    init = partial(jax.nn.initializers.normal(0.02 / math.sqrt(d)), dtype=sd)
+    ks = jax.random.split(key, 10)
+    return {
+        # static token-shift lerp coefficients per stream
+        "mu": jnp.full((5, d), 0.5, jnp.float32),  # r, k, v, g, w
+        "wr": init(ks[0], (d, d)),
+        "wk": init(ks[1], (d, d)),
+        "wv": init(ks[2], (d, d)),
+        "wg": init(ks[3], (d, d)),
+        "w0": jnp.full((d,), -3.0, jnp.float32),
+        "w_lora_a": init(ks[4], (d, LORA_R)),
+        "w_lora_b": jnp.zeros((LORA_R, d), sd),
+        "u": jax.nn.initializers.normal(0.5, dtype=jnp.float32)(
+            ks[5], (h, HEAD_K)
+        ),
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        "wo": init(ks[6], (d, d)),
+    }
+
+
+def _streams(params: dict, x: jax.Array, x_prev: jax.Array):
+    """Token-shift lerp for the five streams; x/(B,T,D), x_prev shifted."""
+    mu = params["mu"].astype(x.dtype)
+    mix = lambda i: x + (x_prev - x) * mu[i]
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    logw = -jnp.exp(
+        params["w0"].astype(jnp.float32)
+        + (jnp.tanh(xw.astype(jnp.float32) @ params["w_lora_a"].astype(jnp.float32))
+           @ params["w_lora_b"].astype(jnp.float32))
+    )
+    w = jnp.exp(logw)  # in (0, 1)
+    return r, k, v, g, w
+
+
+def _wkv_step(state, inputs, u):
+    """state: (B,H,Dk,Dv); inputs r,k,v,w: (B,H,Dk|Dv)."""
+    r, k, v, w = inputs
+    kv = k[..., :, None] * v[..., None, :]                  # (B,H,Dk,Dv)
+    o = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, o
+
+
+def wkv_scan(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+    u: jax.Array, state: jax.Array, chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """(B,T,H,Dk) streams -> (out (B,T,H,Dv), final state).
+
+    Outer scan over chunks with rematerialized inner scans: backward-pass
+    memory is one state per chunk boundary instead of per step.
+    """
+    B, T, H, Dk = r.shape
+    Dv = v.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        zs = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zs(r), zs(k), zs(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    nc = (T + pad) // chunk
+    # (nc, chunk, B, H, D)
+    resh = lambda a: a.reshape(B, nc, chunk, H, -1).transpose(1, 2, 0, 3, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    @jax.checkpoint
+    def chunk_step(s, xs):
+        rs, ks, vs, ws = xs
+
+        def step(s, x):
+            return _wkv_step(s, x, u)
+
+        s, o = jax.lax.scan(step, s, (rs, ks, vs, ws))
+        return s, o
+
+    state, out = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    out = out.reshape(nc * chunk, B, H, Dv).transpose(1, 0, 2, 3)
+    return out[:, :T], state
+
+
+def rwkv_mix(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, T, D)
+    cache: dict | None = None,          # {"state": (B,H,Dk,Dv), "x_prev": (B,D)}
+) -> tuple[jax.Array, dict | None]:
+    B, T, D = x.shape
+    H = rwkv_head_count(cfg)
+    if cache is not None:
+        prev_tok = cache["x_prev"][:, None, :]
+    else:
+        prev_tok = jnp.zeros((B, 1, D), x.dtype)
+    x_prev = jnp.concatenate([prev_tok, x[:, :-1]], axis=1)
+
+    r, k, v, g, w = _streams(params, x, x_prev)
+    hs = lambda a: a.reshape(B, T, H, HEAD_K)
+    r, k, v, w = hs(r), hs(k), hs(v), hs(w.astype(x.dtype))
+    u = params["u"].astype(jnp.float32)
+
+    state = (
+        cache["state"]
+        if cache is not None
+        else jnp.zeros((B, H, HEAD_K, HEAD_K), jnp.float32)
+    )
+    out, state = wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), w.astype(jnp.float32), u, state,
+    )
+    o = out.reshape(B, T, D).astype(x.dtype)
+    # group-norm per head approximated by rms over D, then gate
+    of = o.astype(jnp.float32)
+    o = (of * jax.lax.rsqrt(jnp.mean(of * of, -1, keepdims=True) + 1e-6)
+         * params["ln_scale"]).astype(x.dtype)
+    o = o * g
+    y = o @ params["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state, "x_prev": x[:, -1]}
+    return y, new_cache
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int) -> dict:
+    H = rwkv_head_count(cfg)
+    return {
+        "state": jnp.zeros((batch, H, HEAD_K, HEAD_K), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+    }

@@ -1,0 +1,39 @@
+"""Interstellar core: loop-nest scheduling, analytical model, optimizer.
+
+Public API surface re-exported for convenience; see DESIGN.md §3.
+"""
+
+from repro.core.blocking import SearchResult, iter_blockings, search_blocking
+from repro.core.dataflow import Dataflow, enumerate_dataflows, make_dataflow
+from repro.core.energy import CostTable, Report, evaluate
+from repro.core.loopnest import (
+    LoopNest,
+    TensorRef,
+    conv_nest,
+    depthwise_nest,
+    fc_nest,
+    matmul_nest,
+)
+from repro.core.mapper import MatmulTiles, choose_matmul_tiles
+from repro.core.optimizer import (
+    HardwareConfig,
+    NetworkResult,
+    evaluate_network,
+    eyeriss_like,
+    optimize_layer,
+    optimize_network,
+    tpu_like,
+)
+from repro.core.reuse import AccessCounts, analyze
+from repro.core.schedule import ArraySpec, MemLevel, Schedule, flat_schedule
+from repro.core.simulate import simulate
+
+__all__ = [
+    "AccessCounts", "ArraySpec", "CostTable", "Dataflow", "HardwareConfig",
+    "LoopNest", "MatmulTiles", "MemLevel", "NetworkResult", "Report",
+    "Schedule", "SearchResult", "TensorRef", "analyze", "choose_matmul_tiles",
+    "conv_nest", "depthwise_nest", "enumerate_dataflows", "evaluate",
+    "evaluate_network", "eyeriss_like", "fc_nest", "flat_schedule",
+    "iter_blockings", "make_dataflow", "matmul_nest", "optimize_layer",
+    "optimize_network", "search_blocking", "simulate", "tpu_like",
+]

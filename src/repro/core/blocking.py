@@ -1,0 +1,324 @@
+"""Loop-blocking search (paper §3.1/§6.1): the dominant knob.
+
+Given a hardware skeleton (memory levels + PE array) and a dataflow (spatial
+unrolling), search per-level tiling factors and per-level loop orders that
+minimize the analytical energy.  The paper performs "a conservatively pruned
+search over the full design space guided by domain-specific knowledge"; we
+implement the same style:
+
+  * per-level tile enumeration over divisors with monotone capacity pruning,
+  * stratified subsampling when a level's choice count explodes (keeps both
+    buffer-filling and tiny tiles - the former usually win, Obs 1),
+  * loop orders chosen greedily per level from stationarity templates
+    (irrelevant-dims-innermost per tensor) or exhaustive permutations when
+    few dims are active.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random
+from typing import Iterator, Sequence
+
+from repro.core.dataflow import Dataflow
+from repro.core.energy import CostTable, Report, evaluate
+from repro.core.loopnest import LoopNest, divisors
+from repro.core.schedule import ArraySpec, MemLevel, Schedule
+
+
+# ------------------------------------------------------------------ orders --
+
+
+def order_candidates(
+    nest: LoopNest, active: Sequence[str], exhaustive_limit: int = 4
+) -> list[tuple[str, ...]]:
+    """Candidate loop orders (innermost-first) for one level.
+
+    Only dims with trip > 1 ("active") matter; inactive dims are appended.
+    If few are active, try all permutations; otherwise use stationarity
+    templates: for each tensor, its irrelevant dims innermost (so it stays
+    resident below), largest-trip-last inside groups.
+    """
+    inactive = [d for d in nest.dims if d not in active]
+    if len(active) <= exhaustive_limit:
+        return [tuple(p) + tuple(inactive) for p in itertools.permutations(active)]
+    cands: list[tuple[str, ...]] = []
+    seen = set()
+    for t in nest.tensors:
+        irr = [d for d in active if d not in t.relevant]
+        rel = [d for d in active if d in t.relevant]
+        cand = tuple(irr + rel + inactive)
+        if cand not in seen:
+            seen.add(cand)
+            cands.append(cand)
+    default = tuple(active) + tuple(inactive)
+    if default not in seen:
+        cands.append(default)
+    return cands
+
+
+def optimize_orders(schedule: Schedule, table: CostTable | None = None) -> Report:
+    """Greedy per-level order selection, innermost level first, evaluating the
+    full analytical energy at each step."""
+    table = table or CostTable.asic_28nm(schedule)
+    best = evaluate(schedule, table)
+    orders = list(schedule.order)
+    for l in range(len(schedule.levels)):
+        active = [d for d in schedule.nest.dims if schedule.tiling[d][l] > 1]
+        if not active:
+            continue
+        for cand in order_candidates(schedule.nest, active):
+            trial_orders = list(orders)
+            trial_orders[l] = cand
+            trial = dataclasses.replace(schedule, order=tuple(trial_orders))
+            rep = evaluate(trial, table)
+            if rep.energy_pj < best.energy_pj:
+                best = rep
+                orders = trial_orders
+    return best
+
+
+# ------------------------------------------------------------------ tiling --
+
+
+def _tile_choices(
+    nest: LoopNest,
+    rem: dict[str, int],
+    base_tile: dict[str, int],
+    capacity_words: int | None,
+    double: bool,
+    max_choices: int,
+) -> list[dict[str, int]]:
+    """Enumerate per-dim divisor factors whose cumulative footprint fits."""
+    dims = sorted(rem, key=lambda d: -rem[d])
+    out: list[dict[str, int]] = []
+
+    def footprint(tile: dict[str, int]) -> int:
+        full = {d: base_tile[d] * tile.get(d, 1) for d in nest.dims}
+        words = sum(t.tile_elems(full) for t in nest.tensors)
+        return words * (2 if double else 1)
+
+    def rec(i: int, tile: dict[str, int]):
+        if i == len(dims):
+            out.append(dict(tile))
+            return
+        d = dims[i]
+        for f in divisors(rem[d]):
+            tile[d] = f
+            if capacity_words is not None and footprint(tile) > capacity_words:
+                del tile[d]
+                break  # factors ascend; larger only grows footprint
+            rec(i + 1, tile)
+        tile.pop(d, None)
+
+    rec(0, {})
+    if len(out) > max_choices:
+        # stratified subsample by footprint: keep spread from tiny to full
+        out.sort(key=footprint)
+        idx = [round(i * (len(out) - 1) / (max_choices - 1)) for i in range(max_choices)]
+        out = [out[i] for i in sorted(set(idx))]
+    return out
+
+
+def iter_blockings(
+    nest: LoopNest,
+    levels: Sequence[MemLevel],
+    array: ArraySpec,
+    dataflow: Dataflow,
+    word_bytes: int = 2,
+    max_choices_per_level: int = 64,
+    seed: int = 0,
+) -> Iterator[Schedule]:
+    """Yield valid blocked schedules (default orders; caller optimizes).
+
+    Per-level choices are deterministically shuffled so that a truncated
+    consumer (max_evals) still samples the whole space instead of a DFS
+    corner.
+    """
+    L = len(levels)
+    rng = random.Random(seed)
+    spatial = dataflow.assigns
+    sp_factor = {d: dataflow.factor(d) for d in nest.dims}
+    top_rem = {
+        d: math.ceil(nest.bounds[d] / sp_factor[d]) for d in nest.dims
+    }
+    boundary = next(
+        (i for i, lvl in enumerate(levels) if not lvl.per_pe), len(levels)
+    )
+
+    def rec(l: int, rem: dict[str, int], chosen: list[dict[str, int]]):
+        if l == L - 1:  # top level takes the remainder
+            tiling = {}
+            for d in nest.dims:
+                per = [chosen[i].get(d, 1) for i in range(L - 1)] + [rem[d]]
+                tiling[d] = tuple(per)
+            yield Schedule(
+                nest=nest,
+                levels=tuple(levels),
+                tiling=tiling,
+                order=tuple(tuple(nest.dims) for _ in range(L)),
+                array=array,
+                spatial=spatial,
+                word_bytes=word_bytes,
+            )
+            return
+        cap = levels[l].capacity_bytes
+        cap_words = None if cap is None else cap // word_bytes
+        include_sp = l >= boundary
+        base = {d: 1 for d in nest.dims}
+        for i in range(l):
+            for d in nest.dims:
+                base[d] *= chosen[i].get(d, 1)
+        if include_sp:
+            for d in nest.dims:
+                base[d] *= sp_factor[d]
+        tiles = _tile_choices(
+            nest, rem, base, cap_words, levels[l].double_buffered, max_choices_per_level
+        )
+        rng.shuffle(tiles)
+        for tile in tiles:
+            new_rem = {d: rem[d] // tile.get(d, 1) for d in nest.dims}
+            yield from rec(l + 1, new_rem, chosen + [tile])
+
+    yield from rec(0, top_rem, [])
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: Report
+    evaluated: int
+
+
+def _level_energy(
+    schedule: Schedule, table: CostTable, level: int
+) -> float:
+    """Energy contributed by accesses served at `level` (+ array hops when
+    `level` is the array-feeding level)."""
+    from repro.core.reuse import analyze
+
+    acc = analyze(schedule)
+    e = acc.level_total(level) * table.level_pj[level]
+    blevel = min(max(schedule.array_boundary, 1), len(schedule.levels) - 1)
+    if level == blevel:
+        e += sum(acc.hops.values()) * table.hop_pj
+    return e
+
+
+def search_blocking(
+    nest: LoopNest,
+    levels: Sequence[MemLevel],
+    array: ArraySpec,
+    dataflow: Dataflow,
+    table: CostTable | None = None,
+    beam: int = 24,
+    max_choices_per_level: int = 512,
+    max_evals: int = 0,  # kept for API compat; unused by the beam search
+) -> SearchResult:
+    """Top-down beam search with exact partial costs.
+
+    Key property of the access model (reuse.py): the traffic served BY level l
+    depends only on the tiling factors and loop orders at levels >= l (the
+    child tile is then fixed by the remainder).  Choosing factors from the
+    top (DRAM) inward therefore prices each level exactly when it is fixed —
+    the paper's "domain-specific knowledge guided" pruned search made
+    systematic.  A beam keeps the best partial hierarchies; per-level loop
+    orders are optimized from stationarity templates as each level is fixed.
+    """
+    L = len(levels)
+    levels = tuple(levels)
+    spatial = dataflow.assigns
+    sp_factor = {d: dataflow.factor(d) for d in nest.dims}
+    full_rem = {d: math.ceil(nest.bounds[d] / sp_factor[d]) for d in nest.dims}
+    boundary = next((i for i, lvl in enumerate(levels) if not lvl.per_pe), L)
+
+    def mk_schedule(factors: dict[int, dict[str, int]], orders: list | None = None):
+        """factors: level -> dim -> trip (levels fixed so far, top-down);
+        remaining product goes to level 0 placeholder."""
+        tiling = {}
+        for d in nest.dims:
+            per = [1] * L
+            rem = full_rem[d]
+            for l in range(L - 1, 0, -1):
+                f = factors.get(l, {}).get(d, 1)
+                per[l] = f
+                rem //= f
+            per[0] = rem
+            tiling[d] = tuple(per)
+        order = tuple(orders) if orders else tuple(tuple(nest.dims) for _ in range(L))
+        return Schedule(
+            nest=nest, levels=levels, tiling=tiling, order=order,
+            array=array, spatial=spatial,
+        )
+
+    # seed: everything unassigned (all at level 0) — will be carved outward
+    tbl = table or CostTable.asic_28nm(mk_schedule({}))
+
+    # beam entries: (partial_cost, factors, orders, rem)
+    entries: list[tuple[float, dict, list, dict]] = [
+        (0.0, {}, [tuple(nest.dims)] * L, dict(full_rem))
+    ]
+    evaluated = 0
+
+    for l in range(L - 1, 0, -1):
+        child_cap = levels[l - 1].capacity_bytes
+        child_cap_words = (
+            None if child_cap is None else child_cap // 2  # word_bytes=2
+        )
+        child_is_shared = (l - 1) >= boundary
+        nxt: list[tuple[float, dict, list, dict]] = []
+        for cost, factors, orders, rem in entries:
+            base = {d: 1 for d in nest.dims}  # factors at this level multiply rem-child
+            for tile in _tile_choices(
+                nest, rem, base, None, False, max_choices_per_level
+            ):
+                new_rem = {d: rem[d] // tile.get(d, 1) for d in nest.dims}
+                # the child tile (everything still inside) must fit level l-1
+                child_tile = {
+                    d: new_rem[d] * (sp_factor[d] if child_is_shared else 1)
+                    for d in nest.dims
+                }
+                if child_cap_words is not None:
+                    words = sum(t.tile_elems(child_tile) for t in nest.tensors)
+                    if levels[l - 1].double_buffered:
+                        words *= 2
+                    if words > child_cap_words:
+                        continue
+                new_factors = dict(factors)
+                new_factors[l] = tile
+                # pick the best order for this level by its exact energy
+                active = [d for d in nest.dims if tile.get(d, 1) > 1]
+                best_o, best_e = tuple(nest.dims), None
+                for cand in order_candidates(nest, active) if active else [tuple(nest.dims)]:
+                    trial_orders = list(orders)
+                    trial_orders[l] = cand
+                    sched = mk_schedule(new_factors, trial_orders)
+                    e = _level_energy(sched, tbl, l)
+                    evaluated += 1
+                    if best_e is None or e < best_e:
+                        best_e, best_o = e, cand
+                new_orders = list(orders)
+                new_orders[l] = best_o
+                nxt.append((cost + best_e, new_factors, new_orders, new_rem))
+        if not nxt:
+            raise ValueError("no feasible blocking fits the memory hierarchy")
+        nxt.sort(key=lambda x: x[0])
+        # dedup identical remainders+cost to keep beam diverse
+        entries = nxt[: beam]
+
+    # finalize: level-0 factors = remainder; optimize level-0 order; evaluate.
+    best: Report | None = None
+    for cost, factors, orders, rem in entries:
+        active = [d for d in nest.dims if rem[d] > 1]
+        for cand in order_candidates(nest, active) if active else [tuple(nest.dims)]:
+            trial_orders = list(orders)
+            trial_orders[0] = cand
+            sched = mk_schedule(factors, trial_orders)
+            rep = evaluate(sched, tbl)
+            evaluated += 1
+            if best is None or rep.energy_pj < best.energy_pj:
+                best = rep
+    if best is None:
+        raise ValueError("no feasible blocking fits the memory hierarchy")
+    return SearchResult(best=best, evaluated=evaluated)

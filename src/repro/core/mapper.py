@@ -1,0 +1,147 @@
+"""Schedule -> TPU mapping: the paper's technique as a first-class feature.
+
+Three nested scales (DESIGN.md §2):
+
+  1. chip mesh   — spatial loop unrolling of model loops onto mesh axes.
+                   `mesh_dataflow()` prices candidate assignments with the
+                   same access-count machinery (collective traffic = the
+                   "inter-PE hop" term at pod scale).
+  2. HBM<->VMEM  — `choose_matmul_tiles()` runs the blocking search on a
+                   2-level hierarchy (VMEM capacity, HBM unbounded) and
+                   returns Pallas BlockSpec tile sizes for the kernels.
+  3. MXU         — fixed 128x128 systolic C|K dataflow: tiles are rounded to
+                   hardware alignment (8 sublanes x 128 lanes, 128x128 MXU).
+
+This is where `core/` feeds `parallel/sharding.py` and `kernels/*/ops.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+from repro.core import energy as en
+from repro.core.blocking import search_blocking
+from repro.core.dataflow import Dataflow
+from repro.core.loopnest import matmul_nest
+from repro.core.schedule import ArraySpec, MemLevel
+
+MXU_DIM = 128
+SUBLANES = 8
+LANES = 128
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def round_down_pow2(x: int, lo: int) -> int:
+    p = lo
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTiles:
+    """HBM->VMEM blocking for an (M, N, K) matmul: bm/bn/bk block sizes."""
+
+    bm: int
+    bn: int
+    bk: int
+
+    def vmem_bytes(self, dtype_bytes: int = 2) -> int:
+        # A tile + B tile + accumulator tile (fp32), double-buffered operands
+        return (
+            2 * (self.bm * self.bk + self.bk * self.bn) * dtype_bytes
+            + self.bm * self.bn * 4
+        )
+
+
+@functools.lru_cache(maxsize=512)
+def choose_matmul_tiles(
+    M: int,
+    N: int,
+    K: int,
+    vmem_bytes: int = en.TPU_VMEM_BYTES // 4,
+    dtype_bytes: int = 2,
+) -> MatmulTiles:
+    """Blocking-search-backed tile choice, aligned to MXU/VREG geometry.
+
+    Runs the paper's blocking search on the (VMEM, HBM) 2-level hierarchy of
+    the matmul nest, then aligns the winning tile to (8, 128) register tiling
+    and the 128x128 MXU.  Falls back to a bandwidth-balanced analytic tile
+    for degenerate shapes.
+    """
+    # Pad tiny dims up to hardware alignment before searching.
+    Mp, Np, Kp = round_up(M, SUBLANES), round_up(N, LANES), round_up(K, LANES)
+    nest = matmul_nest("mm", M=Mp, N=Np, K=Kp)
+    levels = (
+        MemLevel("VMEM", capacity_bytes=vmem_bytes, double_buffered=True),
+        MemLevel("HBM", capacity_bytes=None),
+    )
+    try:
+        res = search_blocking(
+            nest, levels, ArraySpec(dims=(1,)),
+            Dataflow(assigns=((),)), beam=12,
+        )
+        tile = res.best.schedule.cum_tile(0, include_spatial=False)
+        bm, bn, bk = tile["M"], tile["N"], tile["K"]
+    except ValueError:
+        bm, bn, bk = MXU_DIM, MXU_DIM, MXU_DIM
+    # Hardware alignment: sublane/lane multiples, MXU-friendly, clamp to dim.
+    bm = min(Mp, max(SUBLANES, round_down_pow2(bm, SUBLANES)))
+    bn = min(Np, max(LANES, round_down_pow2(bn, LANES)))
+    bk = min(Kp, max(LANES, round_down_pow2(bk, LANES)))
+    t = MatmulTiles(bm=bm, bn=bn, bk=bk)
+    # Shrink (bm first, then bn/bk) until the working set fits.
+    while t.vmem_bytes(dtype_bytes) > vmem_bytes and t.bm > SUBLANES:
+        t = MatmulTiles(bm=t.bm // 2, bn=t.bn, bk=t.bk)
+    while t.vmem_bytes(dtype_bytes) > vmem_bytes and t.bk > LANES:
+        t = MatmulTiles(bm=t.bm, bn=t.bn, bk=t.bk // 2)
+    while t.vmem_bytes(dtype_bytes) > vmem_bytes and t.bn > LANES:
+        t = MatmulTiles(bm=t.bm, bn=t.bn // 2, bk=t.bk)
+    return t
+
+
+# --------------------------------------------------------------- mesh scale --
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshDataflow:
+    """Assignment of model loops to mesh axes = pod-scale spatial unrolling.
+
+    axes: mesh axis name -> tuple of (loop name, shard factor), nearest-first
+    (replication at pod scale, e.g. ('batch', 8)('seq', 2) on 'data').
+    """
+
+    axes: tuple[tuple[str, tuple[tuple[str, int], ...]], ...]
+
+    def label(self) -> str:
+        return " | ".join(
+            f"{ax}:" + ("".join(d for d, _ in loops) or "-")
+            for ax, loops in self.axes
+        )
+
+
+def mesh_dataflow_cost(
+    *,
+    flops: float,
+    hbm_bytes: float,
+    collective_bytes: float,
+    n_chips: int,
+    ici_links: int = 2,
+) -> dict[str, float]:
+    """The paper's E = sum acc_i * e_i at pod scale, in seconds: the three
+    roofline terms (compute / memory / collective) under v5e constants."""
+    return {
+        "compute_s": flops / (n_chips * en.TPU_PEAK_FLOPS_BF16),
+        "memory_s": hbm_bytes / (n_chips * en.TPU_HBM_BYTES_PER_S),
+        "collective_s": collective_bytes
+        / (n_chips * ici_links * en.TPU_ICI_BYTES_PER_S_PER_LINK),
+    }
+
+
+def dominant_term(cost: dict[str, float]) -> str:
+    return max(cost, key=lambda k: cost[k])

@@ -1,0 +1,196 @@
+"""The paper's efficient optimizer (§6.3) + baseline hardware configs.
+
+Given a DNN (list of loop nests), an energy cost model, and constraints, find
+the hardware resource allocation + per-layer schedules minimizing total
+energy at constant throughput.  Pruning per the paper:
+
+  Obs 1: fix the dataflow to C|K (with replication) and search only blocking.
+  Obs 2: consider only memory hierarchies where adjacent on-chip level sizes
+         sit within a ratio band (~4-16x), so no level dominates energy.
+
+Baselines (paper Fig 14): an Eyeriss-like mobile chip (16x16 PEs, 512 B RF,
+128 KB buffer) and a TPU-like cloud chip (128x128 PEs, 8 B reg, 64 KB L1,
+28 MB L2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.blocking import SearchResult, search_blocking
+from repro.core.dataflow import Dataflow, make_dataflow
+from repro.core.energy import Report
+from repro.core.loopnest import LoopNest
+from repro.core.schedule import ArraySpec, MemLevel
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """Resource allocation: the (N, S1, S2, ...) axis of paper Fig 1."""
+
+    name: str
+    array: ArraySpec
+    rf_bytes: tuple[int, ...]          # per-PE register levels, inner first
+    buffer_bytes: tuple[int, ...]      # shared on-chip buffers, inner first
+    dram_bandwidth_words_per_cycle: float = 16.0
+
+    def levels(self) -> tuple[MemLevel, ...]:
+        lv: list[MemLevel] = []
+        for i, b in enumerate(self.rf_bytes):
+            lv.append(MemLevel(f"RF{i}" if len(self.rf_bytes) > 1 else "RF",
+                               capacity_bytes=b, double_buffered=False,
+                               per_pe=True))
+        for i, b in enumerate(self.buffer_bytes):
+            lv.append(MemLevel(f"BUF{i}" if len(self.buffer_bytes) > 1 else "BUF",
+                               capacity_bytes=b, double_buffered=True))
+        lv.append(MemLevel("DRAM", capacity_bytes=None,
+                           bandwidth_words_per_cycle=self.dram_bandwidth_words_per_cycle))
+        return tuple(lv)
+
+
+def eyeriss_like() -> HardwareConfig:
+    """Paper's mobile baseline: Eyeriss-like hierarchy."""
+    return HardwareConfig(
+        name="eyeriss-like",
+        array=ArraySpec(dims=(16, 16)),
+        rf_bytes=(512,),
+        buffer_bytes=(128 * 1024,),
+    )
+
+
+def tpu_like() -> HardwareConfig:
+    """Paper's cloud baseline: 128x128 array, 8 B reg, 64 KB L1, 28 MB L2."""
+    return HardwareConfig(
+        name="tpu-like",
+        array=ArraySpec(dims=(128, 128)),
+        rf_bytes=(8,),
+        buffer_bytes=(64 * 1024, 28 * 1024 * 1024),
+    )
+
+
+@dataclasses.dataclass
+class LayerResult:
+    nest: LoopNest
+    report: Report
+    dataflow: Dataflow
+
+
+@dataclasses.dataclass
+class NetworkResult:
+    hw: HardwareConfig
+    layers: list[LayerResult]
+
+    @property
+    def total_energy_pj(self) -> float:
+        return sum(l.report.energy_pj for l in self.layers)
+
+    @property
+    def total_cycles(self) -> float:
+        return sum(l.report.cycles for l in self.layers)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.nest.macs() for l in self.layers)
+
+    def tops_per_watt(self, freq_hz: float = 400e6) -> float:
+        seconds = self.total_cycles / freq_hz
+        watts = self.total_energy_pj * 1e-12 / seconds
+        return (2 * self.total_macs / seconds) / watts / 1e12
+
+
+def ck_dataflow(nest: LoopNest, array: ArraySpec) -> Dataflow:
+    """Obs 1: the C|K dataflow (with replication fill) used by the optimizer.
+    For nests without a C-reduction (depthwise), fall back to K|X."""
+    if nest.bounds.get("C", 1) > 1:
+        return make_dataflow(nest, array, ("C", "K"), replication=True)
+    primaries = [d for d in ("K", "X", "Y", "B") if nest.bounds.get(d, 1) > 1]
+    primaries = (primaries + ["K", "X"])[: len(array.dims)]
+    return make_dataflow(nest, array, tuple(primaries), replication=True)
+
+
+def optimize_layer(
+    nest: LoopNest,
+    hw: HardwareConfig,
+    dataflow: Dataflow | None = None,
+    max_evals: int = 2500,
+) -> LayerResult:
+    df = dataflow or ck_dataflow(nest, hw.array)
+    res: SearchResult = search_blocking(
+        nest, hw.levels(), hw.array, df, max_evals=max_evals
+    )
+    return LayerResult(nest=nest, report=res.best, dataflow=df)
+
+
+def evaluate_network(
+    layers: Sequence[LoopNest],
+    hw: HardwareConfig,
+    max_evals_per_layer: int = 2500,
+) -> NetworkResult:
+    return NetworkResult(
+        hw=hw,
+        layers=[optimize_layer(n, hw, max_evals=max_evals_per_layer) for n in layers],
+    )
+
+
+# ----------------------------------------------------------- hw search -----
+
+RF_CHOICES = (16, 32, 64, 128, 256, 512)
+BUF_CHOICES = tuple(k * 1024 for k in (32, 64, 128, 256, 512))
+
+
+def candidate_hierarchies(
+    array: ArraySpec,
+    two_level_rf: bool = True,
+    ratio_band: tuple[int, int] = (4, 16),
+) -> list[HardwareConfig]:
+    """Obs 2 pruning: adjacent on-chip sizes within the ratio band.
+
+    The RF->buffer ratio is taken per-array-total (paper: RF level capacity is
+    per-PE; the balance rule compares total level capacities).
+    """
+    out: list[HardwareConfig] = []
+    n_pe = array.num_pes
+    lo, hi = ratio_band
+    for rf in RF_CHOICES:
+        rf_levels_opts: list[tuple[int, ...]] = [(rf,)]
+        if two_level_rf:
+            for rf0 in RF_CHOICES:
+                if lo <= rf // rf0 <= hi:
+                    rf_levels_opts.append((rf0, rf))
+        for rf_levels in rf_levels_opts:
+            for buf in BUF_CHOICES:
+                total_rf = rf_levels[-1] * n_pe
+                if not (lo <= buf / total_rf or buf >= total_rf):
+                    continue
+                out.append(
+                    HardwareConfig(
+                        name=f"rf{'+'.join(str(b) for b in rf_levels)}-buf{buf//1024}k",
+                        array=array,
+                        rf_bytes=rf_levels,
+                        buffer_bytes=(buf,),
+                    )
+                )
+    return out
+
+
+def optimize_network(
+    layers: Sequence[LoopNest],
+    array: ArraySpec,
+    two_level_rf: bool = False,
+    max_evals_per_layer: int = 1200,
+    hw_candidates: Sequence[HardwareConfig] | None = None,
+) -> NetworkResult:
+    """The efficient optimizer: search hardware x blocking under Obs 1+2."""
+    best: NetworkResult | None = None
+    for hw in hw_candidates or candidate_hierarchies(array, two_level_rf):
+        try:
+            res = evaluate_network(layers, hw, max_evals_per_layer)
+        except ValueError:
+            continue
+        if best is None or res.total_energy_pj < best.total_energy_pj:
+            best = res
+    if best is None:
+        raise ValueError("no feasible hardware configuration found")
+    return best

@@ -1,0 +1,79 @@
+"""Direct CONV2D Pallas kernel - the paper's Algorithm-1 nest on TPU.
+
+TPU adaptation of the 7-loop nest (DESIGN.md §2): the MXU fixes the intra-
+chip dataflow to C|K, so the kernel blocks C and K for VMEM (the paper's
+loop blocking), unrolls FX/FY as static loops (their trip counts are tiny),
+and maps the X*Y pixels onto the MXU rows:
+
+    grid (B, K/bk, C/bc)  - C innermost, accumulating in fp32 VMEM scratch
+    x block (1, H_in, W_in, bc)   w block (FX, FY, bc, bk)
+    out block (1, Ho, Wo, bk)
+    inner: for fy, fx:  (Ho*Wo, bc) @ (bc, bk)  ->  MXU
+
+This mirrors exactly what core/blocking chooses for a (VMEM, HBM) hierarchy:
+the (bc, bk) tile is the level-0 tile of the C|K schedule.  NHWC layout,
+stride 1 (strided layers fall back to ref/XLA in ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_c: int, FX: int, FY: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _, Ho, Wo, bk = o_ref.shape
+    x = x_ref[0]          # (H_in, W_in, bc)
+    w = w_ref[...]        # (FX, FY, bc, bk)
+    acc = acc_ref[...]    # (Ho * Wo, bk)
+    for fy in range(FY):        # fy walks the first (H) spatial dim
+        for fx in range(FX):    # fx walks the second (W) spatial dim
+            win = x[fy : fy + Ho, fx : fx + Wo, :].reshape(Ho * Wo, -1)
+            acc += jax.lax.dot_general(
+                win, w[fy, fx], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    acc_ref[...] = acc
+
+    @pl.when(c == n_c - 1)
+    def _store():
+        o_ref[0, ...] = acc_ref[...].reshape(Ho, Wo, bk).astype(o_ref.dtype)
+
+
+def conv2d_pallas(
+    x: jax.Array,    # (B, H_in, W_in, C)   H_in = Ho + FX - 1 (valid conv)
+    w: jax.Array,    # (FX, FY, C, K)
+    *,
+    bc: int,
+    bk: int,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H_in, W_in, C = x.shape
+    FX, FY, C2, K = w.shape
+    assert C == C2
+    assert C % bc == 0 and K % bk == 0, ((C, K), (bc, bk))
+    Ho, Wo = H_in - FX + 1, W_in - FY + 1
+    n_c = C // bc
+    kern = functools.partial(_conv_kernel, n_c=n_c, FX=FX, FY=FY)
+    return pl.pallas_call(
+        kern,
+        grid=(B, K // bk, n_c),
+        in_specs=[
+            pl.BlockSpec((1, H_in, W_in, bc), lambda b, k, c: (b, 0, 0, c)),
+            pl.BlockSpec((FX, FY, bc, bk), lambda b, k, c: (0, 0, c, k)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, bk), lambda b, k, c: (b, 0, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, K), x.dtype),
+        scratch_shapes=[pltpu.VMEM((Ho * Wo, bk), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

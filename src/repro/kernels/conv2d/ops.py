@@ -1,0 +1,75 @@
+"""jit'd conv2d wrapper: schedule-driven (bc, bk) + fallbacks.
+
+Block sizes come from the paper's blocking search on the CONV nest with a
+(VMEM, HBM) hierarchy (core.blocking): the level-0 C/K factors are the
+kernel's (bc, bk).  Strided convs fall back to the XLA reference (the
+assigned LM architectures only exercise stride 1; the paper's strided CONV1
+layers are analyzed by the analytical model, not this kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import search_blocking
+from repro.core.dataflow import Dataflow
+from repro.core.loopnest import conv_nest
+from repro.core.mapper import round_down_pow2
+from repro.core.schedule import ArraySpec, MemLevel
+from repro.core import energy as en
+from repro.kernels.conv2d.conv2d import conv2d_pallas
+from repro.kernels.conv2d.ref import conv2d_ref
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.lru_cache(maxsize=256)
+def choose_conv_blocks(
+    B: int, Ho: int, Wo: int, C: int, K: int, FX: int, FY: int,
+    vmem_bytes: int = en.TPU_VMEM_BYTES // 8,
+) -> tuple[int, int]:
+    """Run the blocking search on the conv nest; return (bc, bk)."""
+    nest = conv_nest("conv", B=1, K=K, C=C, X=Ho, Y=Wo, FX=FX, FY=FY)
+    levels = (
+        MemLevel("VMEM", capacity_bytes=vmem_bytes, double_buffered=True),
+        MemLevel("HBM", capacity_bytes=None),
+    )
+    try:
+        res = search_blocking(
+            nest, levels, ArraySpec(dims=(1,)), Dataflow(assigns=((),)),
+            beam=8,
+        )
+        tile = res.best.schedule.cum_tile(0, include_spatial=False)
+        bc, bk = tile["C"], tile["K"]
+    except ValueError:
+        bc, bk = 128, 128
+    # hardware alignment: powers of two, lane multiples where possible
+    bc = max(1, min(C, round_down_pow2(bc, 1)))
+    bk = max(1, min(K, round_down_pow2(bk, 1)))
+    while C % bc:
+        bc //= 2
+    while K % bk:
+        bk //= 2
+    return max(bc, 1), max(bk, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def conv2d(
+    x: jax.Array,     # (B, H_in, W_in, C)
+    w: jax.Array,     # (FX, FY, C, K)
+    stride: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if stride != 1:
+        return conv2d_ref(x, w, stride=stride)
+    B, H_in, W_in, C = x.shape
+    FX, FY, _, K = w.shape
+    Ho, Wo = H_in - FX + 1, W_in - FY + 1
+    bc, bk = choose_conv_blocks(B, Ho, Wo, C, K, FX, FY)
+    interp = _should_interpret() if interpret is None else interpret
+    return conv2d_pallas(x, w, bc=bc, bk=bk, interpret=interp)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: valid conv, NHWC x (FX, FY, C, K)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out.astype(x.dtype)

@@ -1,0 +1,117 @@
+"""Flash attention Pallas kernel (online softmax, TPU tiling).
+
+Grid (BH, Tq/bq, Tk/bk) with the KV dimension innermost; running max /
+normalizer / fp32 accumulator live in VMEM scratch across KV steps.  The
+causal/sliding-window mask is computed from absolute positions derived from
+the grid indices (plus a static q_offset for cached decode), so no S x S
+mask tensor ever materializes - the kernel is the Pallas twin of
+arch/attention.blockwise_attention, which doubles as its oracle.
+
+Per DESIGN.md: TPU adaptation keeps the MXU busy with (bq x d) @ (d x bk)
+score tiles and (bq x bk) @ (bk x d) value tiles; bq/bk default to the
+hardware-aligned blocks the core blocking search picks for the score matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, n_k: int, bq: int, bk: int, scale: float,
+    causal: bool, window: int | None, q_offset: int, kv_len: int | None,
+):
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                      # (bq, d)
+    k = k_ref[0]                      # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                         # (bq, bk)
+
+    q_pos = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        ok &= k_pos < kv_len
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(j == n_k - 1)
+    def _store():
+        o_ref[0, ...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,       # (BH, Tq, d)
+    k: jax.Array,       # (BH, Tk, d)
+    v: jax.Array,       # (BH, Tk, d)
+    *,
+    bq: int = 256,
+    bk: int = 512,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Tq, d = q.shape
+    Tk = k.shape[1]
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, ((Tq, Tk), (bq, bk))
+    n_k = Tk // bk
+    scale = 1.0 / math.sqrt(d)
+    kern = functools.partial(
+        _flash_kernel, n_k=n_k, bq=bq, bk=bk, scale=scale,
+        causal=causal, window=window, q_offset=q_offset, kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(BH, Tq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

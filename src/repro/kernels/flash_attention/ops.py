@@ -1,0 +1,60 @@
+"""jit'd GQA-aware wrapper over the flash attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "kv_len", "bq", "bk",
+                     "interpret"),
+)
+def flash_attention(
+    q: jax.Array,       # (B, Tq, KV, G, d) grouped-query layout
+    k: jax.Array,       # (B, Tk, KV, d)
+    v: jax.Array,       # (B, Tk, KV, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    bq: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Returns (B, Tq, KV, G, d).  KV heads are broadcast to the G query
+    groups before the kernel (the fused-GQA variant is a §Perf follow-up)."""
+    B, Tq, KV, G, d = q.shape
+    Tk = k.shape[1]
+    interp = _should_interpret() if interpret is None else interpret
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, Tq, d)
+    kf = jnp.broadcast_to(
+        k.transpose(0, 2, 1, 3)[:, :, None], (B, KV, G, Tk, d)
+    ).reshape(B * KV * G, Tk, d)
+    vf = jnp.broadcast_to(
+        v.transpose(0, 2, 1, 3)[:, :, None], (B, KV, G, Tk, d)
+    ).reshape(B * KV * G, Tk, d)
+    bq_, bk_ = min(bq, Tq), min(bk, Tk)
+    pq, pk = (-Tq) % bq_, (-Tk) % bk_
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+        kv_len = Tk if kv_len is None else min(kv_len, Tk)
+    out = flash_attention_pallas(
+        qf, kf, vf, bq=bq_, bk=bk_, causal=causal, window=window,
+        q_offset=q_offset, kv_len=kv_len, interpret=interp,
+    )
+    out = out[:, :Tq].reshape(B, KV, G, Tq, d).transpose(0, 3, 1, 2, 4)
+    return out

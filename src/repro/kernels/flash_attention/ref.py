@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention (dense softmax, fp32)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,       # (BH, Tq, d)
+    k: jax.Array,       # (BH, Tk, d)
+    v: jax.Array,       # (BH, Tk, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+) -> jax.Array:
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    q_pos = q_offset + jnp.arange(q.shape[1])[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones(s.shape[1:], bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        ok &= k_pos < kv_len
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,135 @@
+"""Linear-recurrence Pallas kernels: diagonal scan (RG-LRU) + WKV-6.
+
+Two recurrences, both sequential in T but embarrassingly parallel across
+(batch, channel/head) - exactly the dims the grid parallelizes:
+
+  diagonal:  h_t = a_t * h_{t-1} + x_t                    (RG-LRU, per chan)
+      grid (B, D/bd); block (1, T, bd); h carried in VMEM scratch; the T
+      loop is a jax.lax.fori_loop inside the kernel (VPU elementwise work).
+
+  wkv6:      o_t = r_t . (S_{t-1} + u * k_t (x) v_t)      (RWKV-6, per head)
+             S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+      grid (B, H); S (Dk, Dv) in VMEM scratch; per-step outer products and
+      row-vector contractions on the VPU/MXU.
+
+The hardware-adaptation note (DESIGN.md): a GPU kernel would assign one
+thread per channel; on TPU the (8,128) VREG tiling wants the channel dim
+contiguous in lanes, which both layouts provide ((T, bd) and (Dk, Dv)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ------------------------------------------------------------ diagonal scan
+
+
+def _diag_kernel(a_ref, x_ref, h0_ref, o_ref, hT_ref):
+    T = a_ref.shape[1]
+
+    def step(t, h):
+        h = a_ref[0, t, :] * h + x_ref[0, t, :]
+        o_ref[0, t, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, T, step, h0_ref[0, :])
+    hT_ref[0, :] = h
+
+
+def linear_scan_pallas(
+    a: jax.Array,     # (B, T, D) fp32
+    x: jax.Array,     # (B, T, D) fp32
+    h0: jax.Array,    # (B, D) fp32
+    *,
+    bd: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, T, D = a.shape
+    bd = min(bd, D)
+    assert D % bd == 0, (D, bd)
+    out, hT = pl.pallas_call(
+        _diag_kernel,
+        grid=(B, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, T, bd), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, T, bd), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, bd), lambda b, d: (b, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, bd), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, bd), lambda b, d: (b, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, x, h0)
+    return out, hT
+
+
+# ------------------------------------------------------------------- WKV-6
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref, s_ref):
+    T = r_ref.shape[2]
+    s_ref[...] = s0_ref[0, 0]
+
+    def step(t, _):
+        r = r_ref[0, 0, t, :]            # (Dk,)
+        kk = k_ref[0, 0, t, :]
+        vv = v_ref[0, 0, t, :]           # (Dv,)
+        ww = w_ref[0, 0, t, :]
+        kv = kk[:, None] * vv[None, :]   # (Dk, Dv)
+        s = s_ref[...]
+        o_ref[0, 0, t, :] = jnp.sum(
+            (s + u_ref[0, :][:, None] * kv) * r[:, None], axis=0
+        )
+        s_ref[...] = ww[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, T, step, 0)
+    sT_ref[0, 0] = s_ref[...]
+
+
+def wkv6_pallas(
+    r: jax.Array,     # (B, H, T, Dk) fp32
+    k: jax.Array,     # (B, H, T, Dk)
+    v: jax.Array,     # (B, H, T, Dv)
+    w: jax.Array,     # (B, H, T, Dk) decay in (0, 1)
+    u: jax.Array,     # (H, Dk) bonus
+    s0: jax.Array,    # (B, H, Dk, Dv)
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+    out, sT = pl.pallas_call(
+        _wkv_kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, T, Dk), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, Dk), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, Dv), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, Dk), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, Dk), lambda b, h: (h, 0)),
+            pl.BlockSpec((1, 1, Dk, Dv), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, Dv), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Dk, Dv), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Dk, Dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, sT

@@ -1,0 +1,32 @@
+"""jit'd wrappers for the linear-scan kernels."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.linear_scan.linear_scan import (
+    linear_scan_pallas,
+    wkv6_pallas,
+)
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("bd", "interpret"))
+def linear_scan(a, x, h0, bd: int = 256, interpret: bool | None = None):
+    interp = _should_interpret() if interpret is None else interpret
+    D = a.shape[-1]
+    bd = min(bd, D)
+    while D % bd:
+        bd //= 2
+    return linear_scan_pallas(a, x, h0, bd=max(bd, 1), interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def wkv6(r, k, v, w, u, s0, interpret: bool | None = None):
+    interp = _should_interpret() if interpret is None else interpret
+    return wkv6_pallas(r, k, v, w, u, s0, interpret=interp)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the linear-scan kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(
+    a: jax.Array, x: jax.Array, h0: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + x_t over axis 1; returns (outs, h_T)."""
+
+    def step(h, ax):
+        at, xt = ax
+        h = at * h + xt
+        return h, h
+
+    hT, out = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2), x.transpose(1, 0, 2))
+    )
+    return out.transpose(1, 0, 2), hT
+
+
+def wkv6_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+    u: jax.Array, s0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 recurrence, (B, H, T, D) layout; returns (out, s_T)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,Dk)/(B,H,Dv)
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, o
+
+    tfirst = lambda z: z.transpose(2, 0, 1, 3)
+    sT, out = jax.lax.scan(step, s0, (tfirst(r), tfirst(k), tfirst(v), tfirst(w)))
+    return out.transpose(1, 2, 0, 3), sT

@@ -1,0 +1,67 @@
+"""Blocked matmul Pallas kernel (TPU target; interpret=True on CPU).
+
+Grid (M/bm, N/bn, K/bk) with K innermost; a fp32 VMEM scratch accumulates
+partial products across K steps (output-stationary at the VMEM level - the
+C|K dataflow of the paper pinned by the MXU, with the K reduction blocked
+exactly as core/blocking chooses).  Block sizes come from
+core.mapper.choose_matmul_tiles, i.e. the paper's blocking search on the
+(VMEM, HBM) two-level hierarchy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N).  Dims must divide by the blocks."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        (M, N, K), (bm, bn, bk)
+    )
+    n_k = K // bk
+    out_dtype = out_dtype or a.dtype
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

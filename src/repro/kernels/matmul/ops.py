@@ -1,0 +1,40 @@
+"""jit'd public wrapper: schedule-driven tile choice + padding + dispatch.
+
+On CPU (this container) the kernel body runs in interpret mode; on TPU it
+compiles to Mosaic.  Tile sizes come from the paper's blocking search
+(core.mapper.choose_matmul_tiles) unless overridden.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapper import MatmulTiles, choose_matmul_tiles
+from repro.kernels.matmul.matmul import matmul_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("tiles", "interpret"))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    tiles: MatmulTiles | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """General (M, K) x (K, N): pads to tile multiples and unpads."""
+    M, K = a.shape
+    _, N = b.shape
+    t = tiles or choose_matmul_tiles(M, N, K)
+    interp = _should_interpret() if interpret is None else interpret
+    bm, bn, bk = min(t.bm, M), min(t.bn, N), min(t.bk, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+    out = matmul_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interp)
+    return out[:M, :N]

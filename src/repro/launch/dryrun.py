@@ -1,0 +1,399 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every live (architecture x input shape) cell and both production meshes
+(16x16 single pod, 2x16x16 multi-pod), this driver:
+
+  1. builds the step function (train_step or serve_step per the shape kind),
+  2. jit-lowers with explicit in/out shardings from parallel/sharding.py and
+     .compile()s - sharding mismatches / OOM / unsupported collectives fail
+     here, which is the point,
+  3. records compiled.memory_analysis() (per-device fit proof),
+  4. reconstructs whole-program cost from cost_analysis() with the A/B trick
+     (XLA counts while-loop bodies once and reports per-device numbers):
+     lower the model at 1 and 2 scan units -> body = c2 - c1, then
+     total = c1 + (units - 1) * body,
+  5. parses collective bytes (all-gather/all-reduce/reduce-scatter/
+     all-to-all/collective-permute) from the compiled HLO with the same A/B
+     reconstruction,
+  6. writes experiments/dryrun/<arch>__<shape>__<mesh>.json for
+     benchmarks/roofline.py.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --all
+      PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k --multi-pod
+"""
+
+import argparse
+import dataclasses
+import gzip
+import json
+import re
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, live_cells
+from repro.parallel.sharding import ShardingPlan
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.launch import specs as specs_mod
+from repro.parallel import policy
+from repro.train import optim
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result bytes of collective ops in (post-SPMD) HLO text.
+
+    Accounting: all-reduce counted 2x result bytes (ring reduce+broadcast);
+    others 1x result bytes.  Async pairs: only the -start op is counted.
+    """
+    out = {c: 0.0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        op, pos = None, -1
+        for c in COLLECTIVES:
+            m = re.search(rf"\b{c}(-start)?\(", rhs)
+            if m:
+                op, pos = c, m.start()
+                break
+        if op is None:
+            continue
+        # result shape(s) sit between '=' and the op name
+        result_part = rhs[:pos]
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(result_part):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        mult = 2.0 if op == "all-reduce" else 1.0
+        out[op] += mult * nbytes
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def scan_unit(cfg) -> int:
+    """Layers per scan step (the A/B reconstruction unit)."""
+    if cfg.family == "hybrid":
+        return cfg.rnn_per_attention + 1
+    return 1
+
+
+def cached_scan_unit(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.rnn_per_attention + 1
+    if cfg.global_every:
+        return cfg.global_every
+    return 1
+
+
+def variant_cfg(cfg, n_units: int, unit: int):
+    n = n_units * unit
+    kw = {"n_layers": n}
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = n
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_cell(arch: str, shape_name: str, mesh, cfg=None):
+    """Build (step_fn, args, in_shardings, out_shardings, donate) for a cell."""
+    plan = ShardingPlan(mesh)
+    n_dp = plan.axis_size(plan.dp_axes)
+    sp = input_specs(arch, shape_name, n_dp=n_dp, cfg=cfg)
+    cfg = cfg or sp["cfg"]
+    shape = sp["shape"]
+
+    params = specs_mod.params_shapes(cfg)
+    serve_tp = shape.kind != "train" and cfg.serve_tp_params
+    pspec = plan.param_spec(params, fsdp=not serve_tp)
+    named = plan.named
+
+    if shape.kind == "train":
+        opt = specs_mod.opt_shapes(params)
+        ospec = plan.opt_state_spec(pspec)
+        batch = sp["batch"]
+        # batch leaves are (mb, bm, ...): shard dim 1 over DP
+        def bspec(leaf):
+            spec = [None] * len(leaf.shape)
+            if leaf.shape[1] % n_dp == 0:
+                spec[1] = plan.dp_axes
+            return P(*spec)
+        bspecs = jax.tree.map(bspec, batch)
+        step = make_train_step(
+            cfg, optim.AdamWConfig(),
+            accum_spec=pspec if cfg.shard_grad_accum else None,
+        )
+        mspec = {"grad_norm": P(), "lr": P(), "loss": P()}
+        return dict(
+            fn=step,
+            args=(params, opt, batch),
+            in_sh=(named(pspec), named(ospec), named(bspecs)),
+            out_sh=(named(pspec), named(ospec), named(mspec)),
+            donate=(0, 1),
+            cfg=cfg,
+        )
+
+    caches = sp["caches"]
+    # rebuild cache shapes under the variant cfg
+    caches = specs_mod.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    cspec = plan.cache_spec(caches)
+    V = cfg.vocab
+    lspec = P(
+        plan.dp_axes if shape.global_batch % n_dp == 0 else None,
+        "model" if V % plan.axis_size("model") == 0 else None,
+    )
+    if shape.kind == "prefill":
+        batch = sp["batch"]
+        bspecs = plan.batch_spec(batch)
+        step = make_prefill_step(cfg)
+        out_sh = (named(lspec), named(cspec))
+        if cfg.family == "encdec":
+            enc_spec = P(
+                plan.dp_axes, None,
+                "model" if cfg.d_model % plan.axis_size("model") == 0 else None,
+            )
+            out_sh = (named(lspec), named(cspec), named(enc_spec))
+        return dict(
+            fn=step,
+            args=(params, batch, caches),
+            in_sh=(named(pspec), named(bspecs), named(cspec)),
+            out_sh=out_sh,
+            donate=(2,),
+            cfg=cfg,
+        )
+
+    # decode
+    tokens = sp["batch"]["tokens"]
+    tspec = P(plan.dp_axes if tokens.shape[0] % n_dp == 0 else None, None)
+    step = make_decode_step(cfg)
+    args = [params, tokens, caches]
+    in_sh = [named(pspec), named(tspec), named(cspec)]
+    if cfg.family == "encdec":
+        enc = sp["enc_out"]
+        espec = P(
+            plan.dp_axes if enc.shape[0] % n_dp == 0 else None, None,
+            "model" if cfg.d_model % plan.axis_size("model") == 0 else None,
+        )
+        args.append(enc)
+        in_sh.append(named(espec))
+    return dict(
+        fn=step,
+        args=tuple(args),
+        in_sh=tuple(in_sh),
+        out_sh=(named(lspec), named(cspec)),
+        donate=(2,),
+        cfg=cfg,
+    )
+
+
+def lower_compile(cell):
+    t0 = time.time()
+    jitted = jax.jit(
+        cell["fn"],
+        in_shardings=cell["in_sh"],
+        out_shardings=cell["out_sh"],
+        donate_argnums=cell["donate"],
+    )
+    lowered = jitted.lower(*cell["args"])
+    compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def cost_of(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def apply_overrides(cfg, overrides: dict[str, str]):
+    """--set key=value config overrides for §Perf variants."""
+    kw = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            kw[k] = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            kw[k] = int(v)
+        else:
+            kw[k] = v
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool,
+    overrides: dict[str, str] | None = None,
+    rules: dict[str, str] | None = None,
+) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    full_cfg = get(arch)
+    if overrides:
+        full_cfg = apply_overrides(full_cfg, overrides)
+    unit = (
+        scan_unit(full_cfg)
+        if shape.kind == "train"
+        else cached_scan_unit(full_cfg)
+    )
+    n_units_full = full_cfg.n_layers // unit
+
+    with mesh, policy.activate(mesh, rules):
+        # full model: the fit proof + compile-success gate
+        cell = build_cell(arch, shape_name, mesh, cfg=full_cfg)
+        compiled_full, t_full = lower_compile(cell)
+        mem = compiled_full.memory_analysis()
+        cost_full = cost_of(compiled_full)
+
+        # A/B variants for whole-program reconstruction
+        c1_cfg = variant_cfg(full_cfg, 1, unit)
+        c2_cfg = variant_cfg(full_cfg, 2, unit)
+        cell1 = build_cell(arch, shape_name, mesh, cfg=c1_cfg)
+        cell2 = build_cell(arch, shape_name, mesh, cfg=c2_cfg)
+        comp1, _ = lower_compile(cell1)
+        comp2, _ = lower_compile(cell2)
+        cost1, cost2 = cost_of(comp1), cost_of(comp2)
+        hlo1, hlo2 = comp1.as_text(), comp2.as_text()
+        coll1 = collective_bytes(hlo1)
+        coll2 = collective_bytes(hlo2)
+
+    recon = {}
+    for k in ("flops", "bytes"):
+        body = cost2[k] - cost1[k]
+        recon[k] = cost1[k] + max(body, 0.0) * (n_units_full - 1)
+    coll = {}
+    for k in coll1:
+        body = coll2[k] - coll1[k]
+        coll[k] = coll1[k] + max(body, 0.0) * (n_units_full - 1)
+
+    return {
+        "_hlo1_gz": hlo1,  # swapped for a gz sidecar path at write time
+        "_hlo2_gz": hlo2,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "overrides": overrides or {},
+        "rules": rules or {},
+        "kind": shape.kind,
+        "compile_s": round(t_full, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        # per-device numbers (XLA convention), scan bodies re-multiplied
+        "cost_per_device": recon,
+        "cost_raw": {"full": cost_full, "c1": cost1, "c2": cost2},
+        "collective_bytes_per_device": coll,
+        "scan_units": n_units_full,
+        "microbatches": (
+            jax.tree.leaves(cell["args"][2])[0].shape[0]
+            if shape.kind == "train"
+            else 1
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for variant records")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", help="ModelConfig override")
+    ap.add_argument("--rule", action="append", default=[],
+                    metavar="LOGICAL=AXIS", help="activation-sharding rule")
+    args = ap.parse_args()
+
+    overrides = dict(kv.split("=", 1) for kv in getattr(args, "set"))
+    rules = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rules[k] = None if v in ("none", "None") else v
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        cells = [
+            (a, s, mp)
+            for (a, s) in live_cells()
+            for mp in (False, True)
+        ]
+    else:
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for arch, shape_name, mp in cells:
+        tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.all and os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape_name, mp, overrides, rules)
+            # HLO text saved as gz sidecars for offline re-analysis
+            for key, suffix in (("_hlo1_gz", ".c1.hlo.gz"),
+                                ("_hlo2_gz", ".c2.hlo.gz")):
+                txt = rec.pop(key)
+                with gzip.open(path.replace(".json", suffix), "wt") as gf:
+                    gf.write(txt)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"[ok]   {tag}  compile={rec['compile_s']}s "
+                f"peak/dev={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                f"t={time.time()-t0:.0f}s"
+            )
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            print(f"[FAIL] {tag}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        raise SystemExit(1)
+    print("all cells green")
+
+
+if __name__ == "__main__":
+    main()

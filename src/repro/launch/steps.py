@@ -1,0 +1,121 @@
+"""Step-function builders shared by the dry-run, train and serve launchers.
+
+All step functions are pure (params/opt/caches in -> out) so they can be
+jit-compiled with explicit in/out shardings for the production mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.arch.model_zoo import build
+from repro.configs.base import ModelConfig
+from repro.train import optim
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    model = build(cfg)
+    if cfg.family == "encdec":
+        return lambda p, b: model.loss(
+            p, b["frames"], b["tokens"], b["labels"]
+        )
+    if cfg.family == "vlm":
+        return lambda p, b: model.loss(
+            p, b["tokens"], b["labels"], patches=b["patches"]
+        )
+    return lambda p, b: model.loss(p, b["tokens"], b["labels"])
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ocfg: optim.AdamWConfig,
+    accum_spec: Any | None = None,
+) -> Callable:
+    """Microbatched train step.  Batch leaves are pre-shaped
+    (microbatches, per_mb_batch, ...) - grad-accumulated with lax.scan so
+    live activation memory is one microbatch.
+
+    accum_spec (§Perf, grok hillclimb): PartitionSpec tree pinning the grad
+    accumulator (and each microbatch's grads) to the PARAM sharding.  Without
+    it XLA reshards the scan carry via replicate-then-partition, i.e. a full
+    fp32-gradient all-reduce EVERY microbatch; with it the per-mb reduction
+    is a reduce-scatter of the already-sharded gradients.
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def constrain(tree):
+        if accum_spec is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, accum_spec,
+        )
+
+    def step(params, opt_state, batch):
+        mb = jax.tree.leaves(batch)[0].shape[0]
+
+        def mb_body(acc, b):
+            loss, g = jax.value_and_grad(loss_fn)(params, b)
+            g = constrain(g)
+            gacc, lacc = acc
+            gacc = constrain(jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32), gacc, g
+            ))
+            return (gacc, lacc + loss), None
+
+        zero = constrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        ))
+        (gsum, lsum), _ = jax.lax.scan(
+            mb_body, (zero, jnp.zeros((), jnp.float32)), batch
+        )
+        grads = jax.tree.map(lambda g: g / mb, gsum)
+        params, opt_state, metrics = optim.apply_updates(
+            ocfg, params, grads, opt_state
+        )
+        metrics["loss"] = lsum / mb
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    model = build(cfg)
+    if cfg.family == "encdec":
+        def step(params, batch, caches):
+            logits, (caches, enc_out) = model.prefill(
+                params, batch["frames"], batch["tokens"], caches
+            )
+            return logits, caches, enc_out
+        return step
+    if cfg.family == "vlm":
+        def step(params, batch, caches):
+            logits, caches = model.prefill(
+                params, batch["tokens"], caches, patches=batch["patches"]
+            )
+            return logits, caches
+        return step
+
+    def step(params, batch, caches):
+        return model.prefill(params, batch["tokens"], caches)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    model = build(cfg)
+    if cfg.family == "encdec":
+        def step(params, tokens, caches, enc_out):
+            logits, (caches, enc_out) = model.decode_step(
+                params, tokens, (caches, enc_out)
+            )
+            return logits, caches
+        return step
+
+    def step(params, tokens, caches):
+        return model.decode_step(params, tokens, caches)
+
+    return step

@@ -1,0 +1,83 @@
+"""Logical-axis activation sharding policy.
+
+Model code names activation dims logically (batch/seq/heads/ff/vocab/...);
+launchers activate a mapping from logical names to mesh axes, and
+`shard(x, ...)` emits with_sharding_constraint at trace time.  When no
+policy is active (CPU unit tests) it is a no-op, so model code stays
+mesh-agnostic.
+
+This is the pod-scale analogue of the paper's `in`/`compute_at`: the policy
+pins which loop dims live on which physical array dimension, and XLA's SPMD
+partitioner materializes the data movement that choice implies (visible in
+the dry-run's collective bytes).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: dict[str, Any] | None = None
+_AXIS_SIZES: dict[str, int] | None = None
+
+
+def default_rules(mesh) -> dict[str, Any]:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return {
+        "batch": dp_ax,
+        "seq": None,
+        "embed": None,          # residual stream replicated across 'model'
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "expert": None,
+        "cap": None,
+        "kv_seq": "model",      # flash-decoding style KV sharding
+    }
+
+
+@contextlib.contextmanager
+def activate(mesh, rules: Mapping[str, Any] | None = None):
+    global _ACTIVE, _AXIS_SIZES
+    prev, prev_sizes = _ACTIVE, _AXIS_SIZES
+    _ACTIVE = dict(default_rules(mesh))
+    if rules:
+        _ACTIVE.update(rules)
+    _AXIS_SIZES = {name: mesh.shape[name] for name in mesh.axis_names}
+    try:
+        yield
+    finally:
+        _ACTIVE, _AXIS_SIZES = prev, prev_sizes
+
+
+def _axis_size(ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return math.prod(_axis_size(a) for a in ax)
+    return _AXIS_SIZES.get(ax, 1)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply the active policy to x; drops axes that don't divide."""
+    if _ACTIVE is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        ax = _ACTIVE.get(name) if name else None
+        if ax is not None and dim % _axis_size(ax) == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def active() -> bool:
+    return _ACTIVE is not None

@@ -1,0 +1,182 @@
+"""Sharding plans: pod-scale spatial unrolling of the model loop nest.
+
+In the paper's taxonomy (core/dataflow.py) a distributed mapping is a spatial
+unrolling of loops onto physical dims.  Here the physical dims are mesh axes:
+
+    batch (B)          -> ('pod', 'data')     data parallel (+ pod DP)
+    d_model / hidden   -> 'data'  (FSDP: params/opt-state sharded, gathered
+                                   on use - ZeRO-3)
+    heads / d_ff / V   -> 'model' (tensor parallel)
+    KV-cache sequence  -> 'model' (flash-decoding style sequence sharding)
+
+Rules are path-based over plain param pytrees; every rule degrades to
+replication when a dim is not divisible by the axis size (uneven vocab
+like granite-moe's 49155 stays replicated rather than failing to lower).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path substring, spec for the TRAILING dims; leading dims -> None)
+PARAM_RULES: tuple[tuple[str, tuple], ...] = (
+    ("embed/tok", ("model", "data")),
+    ("embed/unembed", ("data", "model")),
+    ("patch_proj", (None, "model")),
+    ("/wq", ("data", "model")),
+    ("/wk", ("data", "model")),
+    ("/wv", ("data", "model")),
+    ("/wg", ("data", "model")),
+    ("/wr", ("data", "model")),
+    ("/wo", ("model", "data")),
+    ("mlp/w_in", ("data", "model")),
+    ("mlp/w_gate", ("data", "model")),
+    ("mlp/w_out", ("model", "data")),
+    ("moe/router", (None, None)),
+    ("moe/w_in", (None, "data", "model")),
+    ("moe/w_gate", (None, "data", "model")),
+    ("moe/w_out", (None, "model", "data")),
+    ("w_lora_a", ("data", None)),
+    ("w_lora_b", (None, "data")),
+    ("rnn/w_y", ("data", "model")),
+    ("rnn/w_x", ("data", "model")),
+    ("rnn/w_a", ("data", "model")),
+    ("rnn/w_i", ("data", "model")),
+    ("rnn/w_o", ("model", "data")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    def axis_size(self, name) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, tuple):
+            return math.prod(self.axis_size(n) for n in name)
+        return self.mesh.shape[name]
+
+    def _fit(self, shape: tuple[int, ...], spec: Sequence) -> P:
+        """Drop axes that do not evenly divide their dim (graceful fallback).
+        The FSDP axis 'data' expands to all DP axes (pod included) so ZeRO
+        sharding scales with the full data-parallel world size."""
+        full = [None] * (len(shape) - len(spec)) + list(spec)
+        fixed = []
+        for dim, ax in zip(shape, full):
+            if ax == "data":
+                dp = self.dp_axes
+                ax = dp if len(dp) > 1 else dp[0]
+            if ax is not None and dim % self.axis_size(ax) == 0 and dim > 0:
+                fixed.append(ax)
+            else:
+                fixed.append(None)
+        return P(*fixed)
+
+    # -------------------------------------------------------------- params --
+    def param_spec(self, shapes: Any, fsdp: bool = True) -> Any:
+        """fsdp=False (serving): params TP-sharded over 'model' only and
+        replicated over the data axes - no per-step param all-gather."""
+        def one(path, leaf):
+            ps = _path_str(path)
+            for key, spec in PARAM_RULES:
+                if key in ps:
+                    use = spec if fsdp else tuple(
+                        None if ax == "data" else ax for ax in spec
+                    )
+                    return self._fit(leaf.shape, use)
+            return P(*([None] * len(leaf.shape)))
+
+        return jax.tree_util.tree_map_with_path(one, shapes)
+
+    def opt_state_spec(self, param_specs: Any) -> dict:
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "step": P(),
+        }
+
+    # --------------------------------------------------------------- batch --
+    def batch_spec(self, shapes: Any) -> Any:
+        dp = self.dp_axes
+
+        def one(leaf):
+            if not leaf.shape:
+                return P()
+            spec = [None] * len(leaf.shape)
+            if leaf.shape[0] % self.axis_size(dp) == 0:
+                spec[0] = dp
+            return P(*spec)
+
+        return jax.tree.map(one, shapes)
+
+    # -------------------------------------------------------------- caches --
+    def cache_spec(self, shapes: Any) -> Any:
+        """KV caches: batch over DP axes, cache sequence over 'model'
+        (flash-decoding style); recurrent states: width/heads over 'model'."""
+        dp = self.dp_axes
+
+        def one(path, leaf):
+            ps = _path_str(path)
+            shape = leaf.shape
+            name = ps.rsplit("/", 1)[-1]
+            spec: list = [None] * len(shape)
+            if name in ("k", "v"):
+                # (..., B, size, KV, hd)
+                b_i, s_i = len(shape) - 4, len(shape) - 3
+                if shape[b_i] % self.axis_size(dp) == 0:
+                    spec[b_i] = dp
+                # sequence-shard only LARGE caches: sharding a small ring
+                # buffer turns every insert into a replicate-then-partition
+                # reshard (SPMD cannot localize modular scatters) - §Perf
+                if (shape[s_i] % self.axis_size("model") == 0
+                        and shape[s_i] >= 4096):
+                    spec[s_i] = "model"
+            elif name == "pos":
+                s_i = len(shape) - 1
+                if (shape[s_i] % self.axis_size("model") == 0
+                        and shape[s_i] >= 4096):
+                    spec[s_i] = "model"
+            elif name == "state":
+                # (..., B, H, dk, dv)
+                b_i, h_i = len(shape) - 4, len(shape) - 3
+                if shape[b_i] % self.axis_size(dp) == 0:
+                    spec[b_i] = dp
+                if shape[h_i] % self.axis_size("model") == 0:
+                    spec[h_i] = "model"
+            elif name in ("h", "x_prev", "conv"):
+                b_i = 1 if len(shape) > 2 else 0
+                # trailing width dim over model
+                if shape[-1] % self.axis_size("model") == 0:
+                    spec[-1] = "model"
+                if len(shape) > 1 and shape[b_i] % self.axis_size(dp) == 0:
+                    spec[b_i] = dp
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(one, shapes)
+
+    # ------------------------------------------------------------- helpers --
+    def named(self, spec_tree: Any) -> Any:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )

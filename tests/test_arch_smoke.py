@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family configs,
+one forward/train step on CPU, asserting output shapes + finite values."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.arch.model_zoo import build
+from repro.configs.registry import ARCHS, get
+
+ARCH_IDS = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch, key):
+    cfg = get(arch + "-smoke")
+    model = build(cfg)
+    params = model.init(key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model)
+        ).astype(jnp.bfloat16)
+        loss = model.loss(params, frames, toks, labels)
+    elif cfg.family == "vlm":
+        patches = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.patch_dim)
+        ).astype(jnp.bfloat16)
+        loss = model.loss(params, toks, labels, patches=patches)
+    else:
+        loss = model.loss(params, toks, labels)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_grad_step(arch, key):
+    cfg = get(arch + "-smoke")
+    model = build(cfg)
+    params = model.init(key)
+    B, S = 2, 8
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    if cfg.family == "encdec":
+        frames = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        fn = lambda p: model.loss(p, frames, toks, labels)
+    elif cfg.family == "vlm":
+        patches = jnp.zeros((B, cfg.n_patches, cfg.patch_dim), jnp.bfloat16)
+        fn = lambda p: model.loss(p, toks, labels, patches=patches)
+    else:
+        fn = lambda p: model.loss(p, toks, labels)
+    loss, grads = jax.value_and_grad(fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gleaves = jax.tree.leaves(grads)
+    assert gleaves, "no grads"
+    for g in gleaves:
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["granite-8b", "gemma3-12b", "rwkv6-1.6b", "recurrentgemma-2b",
+     "grok-1-314b", "whisper-medium"],
+)
+def test_params_count_positive(arch):
+    cfg = get(arch)
+    n = cfg.params_count()
+    assert n > 0
+    assert cfg.active_params_count() <= n
+
+
+def test_full_config_dims_match_assignment():
+    """Spot-check exact dims from the assignment sheet."""
+    g = get("granite-8b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff, g.vocab) \
+        == (36, 4096, 32, 8, 14336, 49152)
+    gr = get("grok-1-314b")
+    assert gr.moe.num_experts == 8 and gr.moe.top_k == 2
+    gm = get("granite-moe-1b-a400m")
+    assert gm.moe.num_experts == 32 and gm.moe.top_k == 8
+    assert gm.vocab == 49155
+    g3 = get("gemma3-12b")
+    assert g3.vocab == 262144 and g3.global_every == 6
+    rg = get("recurrentgemma-2b")
+    assert rg.n_kv_heads == 1 and rg.rnn_per_attention == 2

@@ -1,0 +1,198 @@
+"""Unit tests: schedule validation, dataflow taxonomy, blocking search,
+energy tables, optimizer pruning."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    ArraySpec,
+    CostTable,
+    MemLevel,
+    Schedule,
+    conv_nest,
+    enumerate_dataflows,
+    evaluate,
+    eyeriss_like,
+    fc_nest,
+    flat_schedule,
+    make_dataflow,
+    matmul_nest,
+    optimize_layer,
+    search_blocking,
+)
+from repro.core.blocking import iter_blockings
+from repro.core.energy import asic_access_energy_pj
+from repro.core.optimizer import candidate_hierarchies, ck_dataflow
+
+LEVELS = (
+    MemLevel("RF", 512, double_buffered=False, per_pe=True),
+    MemLevel("BUF", 128 * 1024),
+    MemLevel("DRAM", None),
+)
+
+
+# ----------------------------------------------------------------- schedule
+
+
+def test_schedule_rejects_bad_tiling():
+    nest = matmul_nest("mm", M=8, N=8, K=8)
+    with pytest.raises(ValueError):
+        Schedule(
+            nest=nest,
+            levels=LEVELS,
+            tiling={"M": (1, 1, 4), "N": (1, 1, 8), "K": (1, 1, 8)},  # M short
+            order=(("M", "N", "K"),) * 3,
+        )
+
+
+def test_schedule_rejects_nonprefix_per_pe():
+    nest = matmul_nest("mm", M=2, N=2, K=2)
+    bad = (
+        MemLevel("A", None, per_pe=False),
+        MemLevel("B", None, per_pe=True),
+        MemLevel("C", None),
+    )
+    with pytest.raises(ValueError):
+        Schedule(
+            nest=nest, levels=bad,
+            tiling={"M": (1, 1, 2), "N": (1, 1, 2), "K": (1, 1, 2)},
+            order=(("M", "N", "K"),) * 3,
+        )
+
+
+def test_spatial_capacity_enforced():
+    nest = conv_nest("t", B=1, K=64, C=64, X=4, Y=4, FX=1, FY=1)
+    arr = ArraySpec(dims=(4, 4))
+    with pytest.raises(ValueError):
+        flat_schedule(
+            nest, LEVELS, array=arr,
+            spatial=[[("K", 8)], [("C", 4)]],  # 8 > 4 rows
+        )
+
+
+def test_footprint_halo():
+    """Input tiles carry the sliding-window halo: (x + fx - 1)."""
+    nest = conv_nest("t", B=1, K=1, C=1, X=8, Y=8, FX=3, FY=3)
+    s = flat_schedule(nest, LEVELS)
+    tile = {"B": 1, "K": 1, "C": 1, "X": 4, "Y": 4, "FX": 3, "FY": 3}
+    assert nest.tensor("I").tile_elems(tile) == 6 * 6
+    assert nest.tensor("W").tile_elems(tile) == 9
+    assert nest.tensor("O").tile_elems(tile) == 16
+
+
+def test_utilization_replication_paper_fig2():
+    """Paper Fig 2: unrolling C=3 on a 16-dim alone -> 3/16 utilization;
+    replicating X by 5 -> 15/16."""
+    nest = conv_nest("t", B=1, K=8, C=3, X=55, Y=55, FX=3, FY=3)
+    arr = ArraySpec(dims=(16,))
+    lone = flat_schedule(nest, LEVELS, array=arr, spatial=[[("C", 3)]])
+    repl = flat_schedule(nest, LEVELS, array=arr, spatial=[[("C", 3), ("X", 5)]])
+    assert lone.utilization() == pytest.approx(3 / 16)
+    assert repl.utilization() == pytest.approx(15 / 16)
+
+
+# ----------------------------------------------------------------- dataflow
+
+
+def test_dataflow_labels():
+    nest = conv_nest("t", B=4, K=16, C=16, X=8, Y=8, FX=3, FY=3)
+    arr = ArraySpec(dims=(16, 16))
+    df = make_dataflow(nest, arr, ("C", "K"), replication=False)
+    assert "C|K" in df.label()
+    assert df.factor("C") == 16 and df.factor("K") == 16
+
+
+def test_dataflow_enumeration_counts():
+    """Unblocked CONV on a 2D array: up to L*(L-1) ordered primary pairs."""
+    nest = conv_nest("t", B=4, K=16, C=16, X=8, Y=8, FX=3, FY=3)
+    arr = ArraySpec(dims=(4, 4))
+    dfs = enumerate_dataflows(nest, arr, replication=False)
+    assert len(dfs) >= 21  # paper: C(7,2) unordered = 21
+    labels = {d.label() for d in dfs}
+    assert len(labels) == len(dfs)
+
+
+def test_replication_fills_array():
+    nest = conv_nest("t", B=1, K=8, C=3, X=50, Y=50, FX=3, FY=3)
+    arr = ArraySpec(dims=(16, 16))
+    df_no = make_dataflow(nest, arr, ("C", "K"), replication=False)
+    df_yes = make_dataflow(nest, arr, ("C", "K"), replication=True)
+    assert df_yes.used_pes() > df_no.used_pes()
+
+
+# ----------------------------------------------------------------- blocking
+
+
+def test_blocking_capacity_respected():
+    nest = conv_nest("t", B=4, K=32, C=32, X=8, Y=8, FX=3, FY=3)
+    arr = ArraySpec(dims=(4, 4))
+    df = make_dataflow(nest, arr, ("C", "K"))
+    res = search_blocking(nest, LEVELS, arr, df, beam=8)
+    assert res.best.schedule.fits()
+
+
+def test_blocking_beats_flat():
+    nest = conv_nest("t", B=4, K=32, C=32, X=8, Y=8, FX=3, FY=3)
+    arr = ArraySpec(dims=(4, 4))
+    df = make_dataflow(nest, arr, ("C", "K"))
+    res = search_blocking(nest, LEVELS, arr, df, beam=8)
+    flat = evaluate(
+        flat_schedule(nest, LEVELS, array=arr, spatial=df.assigns)
+    )
+    assert res.best.energy_pj < flat.energy_pj
+
+
+def test_iter_blockings_valid():
+    nest = fc_nest("fc", B=4, C=64, K=64)
+    arr = ArraySpec(dims=(4, 4))
+    df = make_dataflow(nest, arr, ("C", "K"))
+    n = 0
+    for s in iter_blockings(nest, LEVELS, arr, df, max_choices_per_level=8):
+        assert s.fits()
+        n += 1
+        if n >= 50:
+            break
+    assert n > 0
+
+
+# ------------------------------------------------------------------- energy
+
+
+def test_table3_values():
+    """Paper Table 3 energy points reproduce exactly."""
+    assert asic_access_energy_pj(16) == pytest.approx(0.03)
+    assert asic_access_energy_pj(64) == pytest.approx(0.12)
+    assert asic_access_energy_pj(512) == pytest.approx(0.96)
+    assert asic_access_energy_pj(32 * 1024) == pytest.approx(6.0)
+    assert asic_access_energy_pj(128 * 1024) == pytest.approx(13.5)
+    assert asic_access_energy_pj(512 * 1024) == pytest.approx(30.375)
+    assert asic_access_energy_pj(None) == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------- optimizer
+
+
+def test_ck_dataflow_handles_depthwise():
+    from repro.core import depthwise_nest
+
+    nest = depthwise_nest("dw", B=2, C=32, X=8, Y=8, FX=3, FY=3)
+    df = ck_dataflow(nest, ArraySpec(dims=(4, 4)))
+    assert df.used_pes() > 1
+
+
+def test_candidate_hierarchies_ratio_band():
+    arr = ArraySpec(dims=(16, 16))
+    cands = candidate_hierarchies(arr, two_level_rf=True)
+    assert cands
+    for hw in cands:
+        if len(hw.rf_bytes) == 2:
+            ratio = hw.rf_bytes[1] / hw.rf_bytes[0]
+            assert 4 <= ratio <= 16
+
+
+def test_optimize_layer_small():
+    nest = conv_nest("t", B=2, K=16, C=16, X=8, Y=8, FX=3, FY=3)
+    res = optimize_layer(nest, eyeriss_like(), max_evals=200)
+    assert res.report.energy_pj > 0
+    assert res.report.schedule.fits()

@@ -1,0 +1,133 @@
+"""Halide front-end lowering + hlo_cost parser + roofline model tests."""
+
+import gzip
+import os
+
+import pytest
+
+from repro.core import analyze, conv_nest, evaluate, simulate
+from repro.core.halide import HalideSchedule, listing1_example
+
+DRYRUN = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "dryrun",
+)
+
+
+def test_listing1_lowers_and_evaluates():
+    nest = conv_nest("l1", B=1, K=64, C=3, X=16, Y=16, FX=5, FY=5)
+    sched = listing1_example(nest)
+    assert sched.cum_tile(1, include_spatial=False)["X"] == 8
+    assert sched.spatial_factor("X") == 4
+    rep = evaluate(sched)
+    assert rep.energy_pj > 0
+
+
+def test_split_accumulates_and_top_absorbs():
+    nest = conv_nest("t", B=2, K=8, C=4, X=8, Y=8, FX=1, FY=1)
+    s = (
+        HalideSchedule(nest)
+        .store("RF", 512, per_pe=True, double_buffered=False)
+        .split("X", 2).split("X", 2)     # accumulates to 4
+        .store("DRAM", None)
+        .accelerate()
+    )
+    assert s.tiling["X"] == (4, 2)       # top absorbs the remainder
+    assert s.padded_bound("X") == 8
+
+
+def test_halide_schedule_matches_simulator():
+    nest = conv_nest("t", B=2, K=4, C=2, X=4, Y=4, FX=1, FY=1)
+    s = (
+        HalideSchedule(nest)
+        .store("RF", None, per_pe=True, double_buffered=False)
+        .split("X", 2).split("K", 2).reorder("X", "K")
+        .store("BUF", None)
+        .split("C", 2).split("B", 2)
+        .store("DRAM", None)
+        .accelerate()
+    )
+    a, b = analyze(s), simulate(s)
+    assert a.reads == b.reads and a.writes == b.writes
+
+
+# --------------------------------------------------------------- hlo_cost
+
+
+def test_hlo_cost_parser_synthetic():
+    from benchmarks.hlo_cost import HloCost
+
+    text = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %y)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%z, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%w_alias
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    text = text.replace("body=%w_alias", "body=%body")
+    h = HloCost(text)
+    cost = h.entry_cost()
+    # dot: 2 * 64 * 8 = 1024 flops, x10 trips (+ tiny adds)
+    assert 10_000 <= cost["flops"] <= 11_000
+    assert cost["coll"]["total"] == 0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(DRYRUN, "granite-8b__train_4k__16x16.c1.hlo.gz")
+    ),
+    reason="dry-run sidecars not generated",
+)
+def test_hlo_cost_on_real_sidecar_matches_hand_math():
+    """granite-8b train reconstruction within 5% of analytic matmul count."""
+    import json
+
+    from benchmarks.hlo_cost import cost_of_file
+
+    c1 = cost_of_file(os.path.join(DRYRUN, "granite-8b__train_4k__16x16.c1.hlo.gz"))
+    c2 = cost_of_file(os.path.join(DRYRUN, "granite-8b__train_4k__16x16.c2.hlo.gz"))
+    rec = json.load(open(os.path.join(DRYRUN, "granite-8b__train_4k__16x16.json")))
+    total = c1["flops"] + (c2["flops"] - c1["flops"]) * (rec["scan_units"] - 1)
+    D, F, T, L, mb = 4096, 14336, 4096, 36, rec["microbatches"]
+    qkvo = 2 * T * (2 * D * 32 * 128 + 2 * D * 8 * 128) / 16
+    ffn = 2 * T * 3 * D * F / 16
+    attn = 4 * T * T * 32 * 128 / 16
+    hand = 4 * (qkvo + ffn + attn) * L * mb
+    assert abs(total - hand) / hand < 0.05
+
+
+def test_roofline_model_flops_families():
+    from benchmarks.roofline import model_flops
+
+    # sliding-window archs cap attention kv_len
+    g = model_flops("gemma3-12b", "prefill_32k")
+    d = model_flops("deepseek-7b", "prefill_32k")
+    assert g > 0 and d > 0
+    # rwkv has no attention-context term
+    r = model_flops("rwkv6-1.6b", "decode_32k")
+    from repro.configs.registry import get
+
+    assert r == pytest.approx(
+        2.0 * get("rwkv6-1.6b").active_params_count() * 128, rel=1e-6
+    )

@@ -1,0 +1,248 @@
+"""Per-kernel correctness: pallas_call (interpret=True on CPU) vs the
+pure-jnp oracle across shape/dtype sweeps (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.linear_scan.ops import linear_scan, wkv6
+from repro.kernels.linear_scan.ref import linear_scan_ref, wkv6_ref
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4
+    )
+
+
+# ------------------------------------------------------------------ matmul
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "M,N,K", [(128, 128, 128), (256, 384, 512), (64, 128, 256), (100, 130, 70)]
+)
+def test_matmul_shapes(M, N, K, dtype):
+    a = jax.random.normal(KEY, (M, K), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (K, N), dtype)
+    got = matmul(a, b)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_matmul_explicit_tiles():
+    from repro.core.mapper import MatmulTiles
+
+    a = jax.random.normal(KEY, (256, 256), jnp.float32)
+    b = jax.random.normal(KEY, (256, 256), jnp.float32)
+    got = matmul(a, b, tiles=MatmulTiles(bm=64, bn=128, bk=128))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(matmul_ref(a, b)), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_matmul_tiles_fit_vmem():
+    from repro.core.mapper import choose_matmul_tiles
+
+    for M, N, K in [(4096, 14336, 4096), (512, 512, 512), (32768, 128, 4096)]:
+        t = choose_matmul_tiles(M, N, K)
+        assert t.vmem_bytes() <= 16 * 1024 * 1024
+        assert t.bm % 8 == 0 and t.bn % 128 == 0 and t.bk % 128 == 0
+
+
+# ----------------------------------------------------------------- conv2d
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,C,K,F", [(1, 8, 8, 16, 3), (2, 13, 16, 8, 3), (1, 6, 4, 4, 1),
+                  (2, 10, 3, 5, 5)]
+)
+def test_conv2d_shapes(B, H, C, K, F, dtype):
+    x = jax.random.normal(KEY, (B, H + F - 1, H + F - 1, C), dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (F, F, C, K), dtype)
+    got = conv2d(x, w)
+    want = conv2d_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_conv2d_strided_fallback():
+    x = jax.random.normal(KEY, (1, 11, 11, 4), jnp.float32)
+    w = jax.random.normal(KEY, (3, 3, 4, 8), jnp.float32)
+    got = conv2d(x, w, stride=2)
+    want = conv2d_ref(x, w, stride=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# --------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Tq,Tk,window", [
+    (128, 128, None), (256, 256, None), (128, 128, 32), (64, 192, None),
+])
+def test_flash_attention(Tq, Tk, window, dtype):
+    B, KV, G, d = 2, 2, 2, 32
+    q = jax.random.normal(KEY, (B, Tq, KV, G, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Tk, KV, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, Tk, KV, d), dtype)
+    got = flash_attention(q, k, v, window=window, bq=64, bk=64)
+    # oracle on flattened heads
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, Tq, d)
+    kf = jnp.broadcast_to(
+        k.transpose(0, 2, 1, 3)[:, :, None], (B, KV, G, Tk, d)
+    ).reshape(B * KV * G, Tk, d)
+    vf = jnp.broadcast_to(
+        v.transpose(0, 2, 1, 3)[:, :, None], (B, KV, G, Tk, d)
+    ).reshape(B * KV * G, Tk, d)
+    want = flash_attention_ref(qf, kf, vf, window=window).reshape(
+        B, KV, G, Tq, d
+    ).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_flash_attention_q_offset_decode():
+    """Cached decode: q at absolute offset attends causally over kv_len."""
+    BH, Tk, d = 2, 128, 32
+    q = jax.random.normal(KEY, (1, 8, 1, 2, d), jnp.float32)
+    k = jax.random.normal(KEY, (1, Tk, 1, d), jnp.float32)
+    v = jax.random.normal(KEY, (1, Tk, 1, d), jnp.float32)
+    got = flash_attention(q, k, v, q_offset=100, kv_len=108, bq=8, bk=64)
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(2, 8, d)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None], (1, 1, 2, Tk, d)).reshape(2, Tk, d)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None], (1, 1, 2, Tk, d)).reshape(2, Tk, d)
+    want = flash_attention_ref(qf, kf, vf, q_offset=100, kv_len=108).reshape(
+        1, 1, 2, 8, d
+    ).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_blockwise_attention_matches_dense():
+    """The XLA blockwise path (model default) vs dense softmax."""
+    from repro.arch.attention import blockwise_attention, dense_attention
+
+    B, T, KV, G, d = 1, 96, 2, 2, 16
+    q = jax.random.normal(KEY, (B, T, KV, G, d), jnp.float32)
+    k = jax.random.normal(KEY, (B, T, KV, d), jnp.float32)
+    v = jax.random.normal(KEY, (B, T, KV, d), jnp.float32)
+    pos = jnp.arange(T)
+    a = dense_attention(q, k, v, q_pos=pos, k_pos=pos)
+    b = blockwise_attention(q, k, v, q_pos=pos, k_pos=pos, block_q=32,
+                            block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)
+
+
+# -------------------------------------------------------------- linear scan
+
+
+@pytest.mark.parametrize("T,D", [(16, 64), (33, 256), (128, 128)])
+def test_linear_scan(T, D):
+    B = 2
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (B, T, D)))
+    x = jax.random.normal(jax.random.fold_in(KEY, 5), (B, T, D))
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 6), (B, D))
+    got, hT = linear_scan(a, x, h0)
+    want, hT_want = linear_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_want), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("T,Dk,Dv", [(8, 16, 16), (32, 64, 64), (17, 32, 64)])
+def test_wkv6_kernel(T, Dk, Dv):
+    B, H = 2, 3
+    r = jax.random.normal(KEY, (B, H, T, Dk))
+    k = jax.random.normal(jax.random.fold_in(KEY, 7), (B, H, T, Dk))
+    v = jax.random.normal(jax.random.fold_in(KEY, 8), (B, H, T, Dv))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 9), (B, H, T, Dk)))
+    u = jax.random.normal(jax.random.fold_in(KEY, 10), (H, Dk))
+    s0 = jax.random.normal(jax.random.fold_in(KEY, 11), (B, H, Dk, Dv))
+    got, sT = wkv6(r, k, v, w, u, s0)
+    want, sT_want = wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_want), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_wkv_scan_model_path_matches_kernel():
+    """arch/rwkv.wkv_scan (chunked remat scan) vs the Pallas wkv6 kernel."""
+    from repro.arch.rwkv import wkv_scan
+
+    B, T, H, D = 1, 40, 2, 16
+    r = jax.random.normal(KEY, (B, T, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 12), (B, T, H, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 13), (B, T, H, D))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 14), (B, T, H, D)))
+    u = jax.random.normal(jax.random.fold_in(KEY, 15), (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    out_model, s_model = wkv_scan(r, k, v, w, u, s0, chunk=16)
+    tfirst = lambda z: z.transpose(0, 2, 1, 3)
+    out_kern, s_kern = wkv6(tfirst(r), tfirst(k), tfirst(v), tfirst(w), u, s0)
+    np.testing.assert_allclose(
+        np.asarray(tfirst(out_model)), np.asarray(out_kern), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(s_model), np.asarray(s_kern), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_blockwise_causal_skip_matches():
+    """§Perf causal_skip variant must be numerically identical."""
+    from repro.arch.attention import blockwise_attention
+
+    B, T, KV, G, d = 1, 128, 2, 2, 16
+    q = jax.random.normal(KEY, (B, T, KV, G, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 20), (B, T, KV, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 21), (B, T, KV, d), jnp.float32)
+    pos = jnp.arange(T)
+    a = blockwise_attention(q, k, v, q_pos=pos, k_pos=pos, block_q=32,
+                            block_k=32, causal_skip=False)
+    b = blockwise_attention(q, k, v, q_pos=pos, k_pos=pos, block_q=32,
+                            block_k=32, causal_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_remat_policy_dots_same_loss():
+    """remat_policy='dots' changes memory, not math."""
+    import dataclasses
+
+    from repro.arch.model_zoo import build
+    from repro.configs.registry import get
+
+    cfg = get("smollm-360m-smoke")
+    cfg2 = dataclasses.replace(cfg, remat_policy="dots")
+    m1, m2 = build(cfg), build(cfg2)
+    params = m1.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    l1 = m1.loss(params, toks, toks)
+    l2 = m2.loss(params, toks, toks)
+    assert float(l1) == pytest.approx(float(l2), abs=1e-3)
+    g1 = jax.grad(lambda p: m1.loss(p, toks, toks))(params)
+    g2 = jax.grad(lambda p: m2.loss(p, toks, toks))(params)
+    d = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        g1, g2,
+    )
+    assert max(jax.tree.leaves(d)) < 1e-2
