@@ -5,16 +5,17 @@ from __future__ import annotations
 import time
 from contextlib import contextmanager
 
-from repro.core import (
-    ArraySpec,
-    MemLevel,
-    search_blocking,
-)
+from repro.core.energy import CostTable
 from repro.core.loopnest import LoopNest
-from repro.core.optimizer import HardwareConfig, LayerResult, ck_dataflow
+from repro.core.optimizer import HardwareConfig, LayerResult, optimize_layer
 
-# cache layer results across hw configs / figures (keyed by bounds + hw)
+# cache layer results across hw configs / figures (keyed by bounds + hw);
+# optimize_layer additionally memoizes the underlying blocking searches
+# structurally, so repeated layer shapes are solved once per hierarchy.
 _LAYER_CACHE: dict = {}
+
+# cost tables depend only on the hierarchy: build once per hw config
+_TABLE_CACHE: dict = {}
 
 
 def cached_optimize_layer(
@@ -27,9 +28,12 @@ def cached_optimize_layer(
     )
     if key in _LAYER_CACHE:
         return _LAYER_CACHE[key]
-    df = ck_dataflow(nest, hw.array)
-    res = search_blocking(nest, hw.levels(), hw.array, df, beam=beam)
-    out = LayerResult(nest=nest, report=res.best, dataflow=df)
+    hw_key = (hw.array.dims, hw.rf_bytes, hw.buffer_bytes)
+    if hw_key not in _TABLE_CACHE:
+        _TABLE_CACHE[hw_key] = CostTable.for_levels(hw.levels())
+    out = optimize_layer(
+        nest, hw, max_evals=0, table=_TABLE_CACHE[hw_key], beam=beam
+    )
     _LAYER_CACHE[key] = out
     return out
 

@@ -5,6 +5,13 @@
 
 Prints the three roofline terms before/after plus deltas - the measurement
 step of the hypothesis -> change -> measure loop.
+
+Mapper mode benchmarks the batched cost-model engine against the scalar
+oracle (mappings priced per second, plus an end-to-end optimize_network
+hardware sweep with seed-equivalent scalar search as the baseline) and
+emits BENCH_mapper.json:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --mapper
 """
 
 from __future__ import annotations
@@ -13,6 +20,7 @@ import argparse
 import glob
 import json
 import os
+import time
 
 from benchmarks.roofline import analyze_record
 
@@ -45,13 +53,167 @@ def compare(base: dict, var: dict) -> str:
     return "\n".join(lines)
 
 
+# --------------------------------------------------------------- mapper ----
+
+
+def _mapper_layers():
+    from repro.core.loopnest import conv_nest, fc_nest
+
+    # small CNN with repeated shapes (real networks repeat layers, which is
+    # what the optimizer's cross-sweep memoization exploits)
+    return [
+        conv_nest("c1", B=1, K=32, C=16, X=14, Y=14, FX=3, FY=3),
+        conv_nest("c2", B=1, K=32, C=32, X=14, Y=14, FX=3, FY=3),
+        conv_nest("c2b", B=1, K=32, C=32, X=14, Y=14, FX=3, FY=3),
+        conv_nest("c3", B=1, K=64, C=32, X=7, Y=7, FX=3, FY=3),
+        conv_nest("c3b", B=1, K=64, C=32, X=7, Y=7, FX=3, FY=3),
+        fc_nest("fc", B=1, C=256, K=64),
+    ]
+
+
+def _mapper_hws():
+    from repro.core.optimizer import HardwareConfig
+    from repro.core.schedule import ArraySpec
+
+    arr = ArraySpec(dims=(8, 8))
+    return [
+        HardwareConfig("rf64-buf32k", arr, rf_bytes=(64,),
+                       buffer_bytes=(32 * 1024,)),
+        HardwareConfig("rf128-buf64k", arr, rf_bytes=(128,),
+                       buffer_bytes=(64 * 1024,)),
+        HardwareConfig("rf256-buf128k", arr, rf_bytes=(256,),
+                       buffer_bytes=(128 * 1024,)),
+    ]
+
+
+def bench_pricing_rate(n_target: int = 2000) -> dict:
+    """Mappings priced per second: scalar evaluate() vs batched engine."""
+    import itertools
+
+    from repro.core.blocking import iter_blockings
+    from repro.core.costmodel import BatchedCostModel
+    from repro.core.energy import CostTable, evaluate
+    from repro.core.loopnest import conv_nest
+    from repro.core.optimizer import ck_dataflow, eyeriss_like
+
+    nest = conv_nest("rate", B=1, K=64, C=64, X=14, Y=14, FX=3, FY=3)
+    hw = eyeriss_like()
+    levels = hw.levels()
+    df = ck_dataflow(nest, hw.array)
+    scheds = list(itertools.islice(
+        iter_blockings(nest, levels, hw.array, df, max_choices_per_level=16),
+        n_target,
+    ))
+    tbl = CostTable.for_levels(levels)
+
+    t0 = time.perf_counter()
+    scalar_e = [evaluate(s, tbl).energy_pj for s in scheds]
+    t_scalar = time.perf_counter() - t0
+
+    cm = BatchedCostModel(nest, levels, array=hw.array, spatial=df.assigns,
+                          table=tbl)
+    til, odr = cm.pack(scheds)
+    t0 = time.perf_counter()
+    batched_e = cm.energy(til, odr)
+    t_batched = time.perf_counter() - t0
+
+    assert all(a == b for a, b in zip(scalar_e, batched_e)), \
+        "batched engine diverged from scalar oracle"
+    n = len(scheds)
+    return {
+        "mappings": n,
+        "scalar_per_s": n / t_scalar,
+        "batched_per_s": n / t_batched,
+        "speedup": t_scalar / t_batched,
+    }
+
+
+def bench_network_sweep() -> dict:
+    """End-to-end hardware sweep: seed-equivalent scalar search vs the
+    batched+pruned+memoized optimizer, asserting identical best energies."""
+    from repro.core.blocking import search_blocking
+    from repro.core.energy import CostTable
+    from repro.core.optimizer import (
+        ck_dataflow,
+        clear_search_cache,
+        optimize_network,
+    )
+
+    layers = _mapper_layers()
+    hws = _mapper_hws()
+
+    t0 = time.perf_counter()
+    base_best = None
+    for hw in hws:
+        levels = hw.levels()
+        table = CostTable.for_levels(levels)
+        try:
+            total = 0.0
+            for nest in layers:
+                df = ck_dataflow(nest, hw.array)
+                res = search_blocking(
+                    nest, levels, hw.array, df, table=table,
+                    engine="scalar", prune=False,
+                )
+                total += res.best.energy_pj
+        except ValueError:
+            continue
+        if base_best is None or total < base_best[0]:
+            base_best = (total, hw.name)
+    t_base = time.perf_counter() - t0
+
+    clear_search_cache()
+    t0 = time.perf_counter()
+    res = optimize_network(layers, hws[0].array, hw_candidates=hws,
+                           max_evals_per_layer=0)
+    t_opt = time.perf_counter() - t0
+
+    return {
+        "layers": len(layers),
+        "hw_candidates": len(hws),
+        "baseline_s": t_base,
+        "optimized_s": t_opt,
+        "speedup": t_base / t_opt,
+        "baseline_energy_pj": base_best[0],
+        "optimized_energy_pj": res.total_energy_pj,
+        "baseline_hw": base_best[1],
+        "optimized_hw": res.hw.name,
+        "identical_best": base_best[0] == res.total_energy_pj
+        and base_best[1] == res.hw.name,
+    }
+
+
+def run_mapper(out_path: str) -> dict:
+    rate = bench_pricing_rate()
+    sweep = bench_network_sweep()
+    result = {"pricing": rate, "optimize_network": sweep}
+    print(f"pricing: scalar {rate['scalar_per_s']:.0f}/s, "
+          f"batched {rate['batched_per_s']:.0f}/s, "
+          f"speedup {rate['speedup']:.1f}x")
+    print(f"sweep: baseline {sweep['baseline_s']:.2f}s, "
+          f"optimized {sweep['optimized_s']:.2f}s, "
+          f"speedup {sweep['speedup']:.1f}x, "
+          f"identical_best={sweep['identical_best']}")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {out_path}")
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", nargs=3, metavar=("ARCH", "SHAPE", "MESH"),
-                    required=True)
-    ap.add_argument("--tag", required=True)
+    ap.add_argument("--cell", nargs=3, metavar=("ARCH", "SHAPE", "MESH"))
+    ap.add_argument("--tag")
     ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mapper", action="store_true",
+                    help="benchmark the batched mapping cost engine")
+    ap.add_argument("--out", default="BENCH_mapper.json")
     args = ap.parse_args()
+    if args.mapper:
+        run_mapper(args.out)
+        return
+    if not args.cell or not args.tag:
+        ap.error("--cell and --tag are required (or pass --mapper)")
     arch, shape, mesh = args.cell
     base = load(os.path.join(args.dir, f"{arch}__{shape}__{mesh}.json"))
     var = load(

@@ -4,6 +4,7 @@ Public API surface re-exported for convenience; see DESIGN.md §3.
 """
 
 from repro.core.blocking import SearchResult, iter_blockings, search_blocking
+from repro.core.costmodel import BatchedCostModel, BatchOverflowError, BatchReport
 from repro.core.dataflow import Dataflow, enumerate_dataflows, make_dataflow
 from repro.core.energy import CostTable, Report, evaluate
 from repro.core.loopnest import (
@@ -29,7 +30,8 @@ from repro.core.schedule import ArraySpec, MemLevel, Schedule, flat_schedule
 from repro.core.simulate import simulate
 
 __all__ = [
-    "AccessCounts", "ArraySpec", "CostTable", "Dataflow", "HardwareConfig",
+    "AccessCounts", "ArraySpec", "BatchOverflowError", "BatchReport",
+    "BatchedCostModel", "CostTable", "Dataflow", "HardwareConfig",
     "LoopNest", "MatmulTiles", "MemLevel", "NetworkResult", "Report",
     "Schedule", "SearchResult", "TensorRef", "analyze", "choose_matmul_tiles",
     "conv_nest", "depthwise_nest", "enumerate_dataflows", "evaluate",

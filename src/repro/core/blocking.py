@@ -22,9 +22,13 @@ import math
 import random
 from typing import Iterator, Sequence
 
+import numpy as np
+
+from repro.core.costmodel import BatchedCostModel, BatchOverflowError
 from repro.core.dataflow import Dataflow
 from repro.core.energy import CostTable, Report, evaluate
-from repro.core.loopnest import LoopNest, divisors
+from repro.core.loopnest import LoopNest, TensorRef, divisors
+from repro.core.reuse import analyze
 from repro.core.schedule import ArraySpec, MemLevel, Schedule
 
 
@@ -195,15 +199,30 @@ def _level_energy(
     schedule: Schedule, table: CostTable, level: int
 ) -> float:
     """Energy contributed by accesses served at `level` (+ array hops when
-    `level` is the array-feeding level)."""
-    from repro.core.reuse import analyze
-
+    `level` is the array-feeding level).  Scalar oracle; the batched form is
+    costmodel.BatchedCostModel.level_energy."""
     acc = analyze(schedule)
     e = acc.level_total(level) * table.level_pj[level]
     blevel = min(max(schedule.array_boundary, 1), len(schedule.levels) - 1)
     if level == blevel:
         e += sum(acc.hops.values()) * table.hop_pj
     return e
+
+
+def _lb_elems(tensor: TensorRef, tile: dict[str, int]) -> int:
+    """Lower bound on tile_elems that stays sound under any stride/halo
+    configuration (min of the halo extent and the plain trip product)."""
+    n = 1
+    handled: set[str] = set()
+    for base, (filt, stride) in tensor.coupled.items():
+        b, f = tile.get(base, 1), tile.get(filt, 1)
+        n *= min(stride * (b - 1) + f, b * f)
+        handled.add(base)
+        handled.add(filt)
+    for d in tensor.dims:
+        if d not in handled:
+            n *= tile.get(d, 1)
+    return n
 
 
 def search_blocking(
@@ -214,7 +233,9 @@ def search_blocking(
     table: CostTable | None = None,
     beam: int = 24,
     max_choices_per_level: int = 512,
-    max_evals: int = 0,  # kept for API compat; unused by the beam search
+    max_evals: int = 0,  # 0 = unlimited; else cap on mappings priced
+    engine: str = "batched",
+    prune: bool = True,
 ) -> SearchResult:
     """Top-down beam search with exact partial costs.
 
@@ -225,100 +246,337 @@ def search_blocking(
     the paper's "domain-specific knowledge guided" pruned search made
     systematic.  A beam keeps the best partial hierarchies; per-level loop
     orders are optimized from stationarity templates as each level is fixed.
+
+    The whole (tile x order) frontier of a level is priced in one batched
+    call (costmodel.BatchedCostModel); `engine="scalar"` prices the same
+    frontier through the scalar oracle instead (identical results, used for
+    differential tests and benchmarks).  With `prune` a greedy dive first
+    establishes an incumbent; beam expansions whose already-fixed cost plus
+    an optimistic remainder (sound per-level traffic lower bounds + MAC
+    energy) exceed it are skipped.  `max_evals > 0` bounds the total number
+    of mappings priced (the search always keeps at least one candidate per
+    level so it can complete).
     """
     L = len(levels)
     levels = tuple(levels)
     spatial = dataflow.assigns
-    sp_factor = {d: dataflow.factor(d) for d in nest.dims}
-    full_rem = {d: math.ceil(nest.bounds[d] / sp_factor[d]) for d in nest.dims}
+    dims = tuple(nest.dims)
+    D = len(dims)
+    dim_idx = {d: i for i, d in enumerate(dims)}
+    default_order = dims
+    sp_factor = {d: dataflow.factor(d) for d in dims}
+    full_rem = {d: math.ceil(nest.bounds[d] / sp_factor[d]) for d in dims}
     boundary = next((i for i, lvl in enumerate(levels) if not lvl.per_pe), L)
+    tbl = table or CostTable.for_levels(levels)
 
-    def mk_schedule(factors: dict[int, dict[str, int]], orders: list | None = None):
-        """factors: level -> dim -> trip (levels fixed so far, top-down);
-        remaining product goes to level 0 placeholder."""
-        tiling = {}
-        for d in nest.dims:
-            per = [1] * L
-            rem = full_rem[d]
-            for l in range(L - 1, 0, -1):
-                f = factors.get(l, {}).get(d, 1)
-                per[l] = f
-                rem //= f
-            per[0] = rem
-            tiling[d] = tuple(per)
-        order = tuple(orders) if orders else tuple(tuple(nest.dims) for _ in range(L))
+    cm: BatchedCostModel | None = None
+    if engine == "batched":
+        try:
+            cm = BatchedCostModel(
+                nest, levels, array=array, spatial=spatial, table=tbl
+            )
+        except BatchOverflowError:
+            cm = None  # fall back to the scalar oracle
+
+    def sched_from(til: np.ndarray, odr: np.ndarray) -> Schedule:
+        """Materialize a Schedule from (L, D) tiling/order-index matrices
+        (values converted to Python ints so downstream scalar arithmetic
+        stays arbitrary-precision)."""
+        tiling = {
+            d: tuple(int(til[l, j]) for l in range(L))
+            for j, d in enumerate(dims)
+        }
+        order = tuple(
+            tuple(dims[int(i)] for i in odr[l]) for l in range(L)
+        )
         return Schedule(
             nest=nest, levels=levels, tiling=tiling, order=order,
             array=array, spatial=spatial,
         )
 
-    # seed: everything unassigned (all at level 0) — will be carved outward
-    tbl = table or CostTable.asic_28nm(mk_schedule({}))
+    # order tuple -> (D,) index row, cached (few distinct orders per search)
+    _order_idx: dict[tuple, np.ndarray] = {}
 
-    # beam entries: (partial_cost, factors, orders, rem)
-    entries: list[tuple[float, dict, list, dict]] = [
-        (0.0, {}, [tuple(nest.dims)] * L, dict(full_rem))
-    ]
-    evaluated = 0
+    def order_row(order: tuple) -> np.ndarray:
+        got = _order_idx.get(order)
+        if got is None:
+            got = _order_idx[order] = np.array(
+                [dim_idx[d] for d in order], dtype=np.int64
+            )
+        return got
 
-    for l in range(L - 1, 0, -1):
-        child_cap = levels[l - 1].capacity_bytes
-        child_cap_words = (
-            None if child_cap is None else child_cap // 2  # word_bytes=2
+    # active-dims tuple -> candidate orders (order_candidates is pure)
+    _ocands: dict[tuple, list] = {}
+
+    def cands_for(active: tuple) -> list:
+        got = _ocands.get(active)
+        if got is None:
+            got = _ocands[active] = (
+                order_candidates(nest, list(active)) if active
+                else [default_order]
+            )
+        return got
+
+    def assemble(g_til, g_odr, sizes, cand_rows, level):
+        """Stack per-group (L, D) matrices into per-row arrays, substituting
+        each row's candidate order at `level`."""
+        til = np.repeat(np.stack(g_til), sizes, axis=0)
+        odr = np.repeat(np.stack(g_odr), sizes, axis=0)
+        odr[:, level, :] = np.stack(cand_rows)
+        return til, odr
+
+    def price_level(til, odr, l) -> np.ndarray:
+        if cm is not None:
+            return cm.level_energy(til, odr, l)
+        return np.array(
+            [_level_energy(sched_from(til[i], odr[i]), tbl, l)
+             for i in range(til.shape[0])]
         )
-        child_is_shared = (l - 1) >= boundary
-        nxt: list[tuple[float, dict, list, dict]] = []
-        for cost, factors, orders, rem in entries:
-            base = {d: 1 for d in nest.dims}  # factors at this level multiply rem-child
+
+    def price_full(til, odr) -> np.ndarray:
+        if cm is not None:
+            return cm.energy(til, odr)
+        return np.array(
+            [evaluate(sched_from(til[i], odr[i]), tbl).energy_pj
+             for i in range(til.shape[0])]
+        )
+
+    # ------------------------------------------------ pruning lower bounds --
+    # Sound optimistic completion cost for a partial hierarchy.  Two facts:
+    #   * stationarity only absorbs IRRELEVANT loops, so for tensor T the
+    #     reload count at any unfixed level is at least the product of T's
+    #     relevant trips among the already-fixed outer factors (rvec), and
+    #   * per reload, covering the remainder region with child tiles streams
+    #     at least elems_T(region) words through the level (per PE for
+    #     per-PE levels).
+    # Hence  lb(l) = pj[l] * mult(l) * sum_T rvec_T * elems_T(region)  and
+    # MAC energy is fixed by the nest.
+    used_pes = dataflow.used_pes()
+    mac_e = nest.macs() * tbl.mac_pj
+    rel_dims = [t.relevant for t in nest.tensors]
+    T = len(nest.tensors)
+
+    def _tile_rvec(tile: dict[str, int]) -> tuple[int, ...]:
+        return tuple(
+            math.prod(f for d, f in tile.items() if d in rel_dims[t_i])
+            for t_i in range(T)
+        )
+
+    _region_cache: dict[tuple, tuple] = {}
+
+    def _region_words(l: int, rem: dict[str, int]) -> tuple[int, tuple[int, ...]]:
+        """(mult, per-tensor elems of the level-l remainder region)."""
+        per_pe_ish = l < max(boundary, 1)
+        key = (per_pe_ish, tuple(rem[d] for d in dims))
+        got = _region_cache.get(key)
+        if got is None:
+            region = {
+                d: rem[d] * (1 if per_pe_ish else sp_factor[d]) for d in dims
+            }
+            got = _region_cache[key] = tuple(
+                _lb_elems(t, region) for t in nest.tensors
+            )
+        return (used_pes if per_pe_ish else 1), got
+
+    # Level 0 admits a second, usually stronger bound: whatever the blocking,
+    # the innermost trip>1 temporal loop breaks stationarity for every tensor
+    # its dim is relevant to, and each dim is relevant to >= k0 tensors — so
+    # at least k0 tensors stream one word per MAC-boundary trip.
+    _trips_total = math.prod(full_rem.values())
+    _k0 = min(
+        (sum(d in r for r in rel_dims) for d in dims if full_rem[d] > 1),
+        default=T,
+    )
+    _lb0_const = _k0 * _trips_total * used_pes * tbl.level_pj[0]
+
+    def lb_level(l: int, rem: dict[str, int], rvec: tuple[int, ...]) -> float:
+        mult, words = _region_words(l, rem)
+        e = sum(r * w for r, w in zip(rvec, words)) * mult * tbl.level_pj[l]
+        return max(e, _lb0_const) if l == 0 else e
+
+    def lb_below(l: int, rem: dict[str, int], rvec: tuple[int, ...]) -> float:
+        return sum(lb_level(lp, rem, rvec) for lp in range(l))
+
+    # Per-(rem, level-choice) expansion metadata, memoized across entries,
+    # levels and the dive/main passes:
+    #   tiles_for(rem) -> [(tile_vec, tile_rvec, active, new_rem, rem_key)]
+    #   footprint of the level-(l-1) child tile keyed by (shared?, new_rem)
+    _tile_cache: dict[tuple, list] = {}
+    _foot_cache: dict[tuple, int] = {}
+
+    def tiles_for(rem: dict[str, int]) -> list:
+        key = tuple(rem[d] for d in dims)
+        got = _tile_cache.get(key)
+        if got is None:
+            base = {d: 1 for d in dims}
+            got = []
             for tile in _tile_choices(
                 nest, rem, base, None, False, max_choices_per_level
             ):
-                new_rem = {d: rem[d] // tile.get(d, 1) for d in nest.dims}
-                # the child tile (everything still inside) must fit level l-1
-                child_tile = {
-                    d: new_rem[d] * (sp_factor[d] if child_is_shared else 1)
-                    for d in nest.dims
-                }
-                if child_cap_words is not None:
-                    words = sum(t.tile_elems(child_tile) for t in nest.tensors)
-                    if levels[l - 1].double_buffered:
-                        words *= 2
-                    if words > child_cap_words:
-                        continue
-                new_factors = dict(factors)
-                new_factors[l] = tile
-                # pick the best order for this level by its exact energy
-                active = [d for d in nest.dims if tile.get(d, 1) > 1]
-                best_o, best_e = tuple(nest.dims), None
-                for cand in order_candidates(nest, active) if active else [tuple(nest.dims)]:
-                    trial_orders = list(orders)
-                    trial_orders[l] = cand
-                    sched = mk_schedule(new_factors, trial_orders)
-                    e = _level_energy(sched, tbl, l)
-                    evaluated += 1
-                    if best_e is None or e < best_e:
-                        best_e, best_o = e, cand
-                new_orders = list(orders)
-                new_orders[l] = best_o
-                nxt.append((cost + best_e, new_factors, new_orders, new_rem))
-        if not nxt:
-            raise ValueError("no feasible blocking fits the memory hierarchy")
-        nxt.sort(key=lambda x: x[0])
-        # dedup identical remainders+cost to keep beam diverse
-        entries = nxt[: beam]
+                tile_vec = np.array(
+                    [tile.get(d, 1) for d in dims], dtype=np.int64
+                )
+                new_rem = {d: rem[d] // tile.get(d, 1) for d in dims}
+                active = tuple(d for d in dims if tile.get(d, 1) > 1)
+                got.append(
+                    (tile_vec, _tile_rvec(tile), active, new_rem,
+                     tuple(new_rem[d] for d in dims))
+                )
+            _tile_cache[key] = got
+        return got
 
-    # finalize: level-0 factors = remainder; optimize level-0 order; evaluate.
-    best: Report | None = None
-    for cost, factors, orders, rem in entries:
-        active = [d for d in nest.dims if rem[d] > 1]
-        for cand in order_candidates(nest, active) if active else [tuple(nest.dims)]:
-            trial_orders = list(orders)
-            trial_orders[0] = cand
-            sched = mk_schedule(factors, trial_orders)
-            rep = evaluate(sched, tbl)
-            evaluated += 1
-            if best is None or rep.energy_pj < best.energy_pj:
-                best = rep
+    def child_words(child_is_shared: bool, new_rem: dict, rem_key: tuple) -> int:
+        key = (child_is_shared, rem_key)
+        got = _foot_cache.get(key)
+        if got is None:
+            child_tile = {
+                d: new_rem[d] * (sp_factor[d] if child_is_shared else 1)
+                for d in dims
+            }
+            got = _foot_cache[key] = sum(
+                t.tile_elems(child_tile) for t in nest.tensors
+            )
+        return got
+
+    evaluated = 0
+    budget = max_evals if max_evals and max_evals > 0 else None
+
+    def run(width: int, incumbent: float) -> Report | None:
+        nonlocal evaluated
+        # beam entries: (partial_cost, til, odr, rem, rvec) with til/odr the
+        # (L, D) tiling / order-index matrices of the fixed outer levels
+        # (remainder parked at level 0, unfixed inner levels all-1/default).
+        seed_til = np.ones((L, D), dtype=np.int64)
+        seed_til[0] = [full_rem[d] for d in dims]
+        seed_odr = np.tile(order_row(default_order), (L, 1))
+        entries: list[tuple[float, np.ndarray, np.ndarray, dict, tuple]] = [
+            (0.0, seed_til, seed_odr, dict(full_rem), (1,) * T)
+        ]
+        for l in range(L - 1, 0, -1):
+            child_cap = levels[l - 1].capacity_bytes
+            child_cap_words = (
+                None if child_cap is None else child_cap // 2  # word_bytes=2
+            )
+            double = levels[l - 1].double_buffered
+            child_is_shared = (l - 1) >= boundary
+            g_til: list[np.ndarray] = []
+            g_odr: list[np.ndarray] = []
+            sizes: list[int] = []
+            cand_rows: list[np.ndarray] = []
+            groups: list[tuple] = []  # (cost, odr, new_rem, new_rvec, cands)
+            n_rows = 0
+            stop = False
+            for cost, til, odr, rem, rvec in entries:
+                if stop:
+                    break
+                if (
+                    prune
+                    and incumbent != math.inf
+                    and cost + mac_e + lb_level(l, rem, rvec) > incumbent
+                ):
+                    continue
+                lb_here = (
+                    lb_level(l, rem, rvec) if incumbent != math.inf else 0.0
+                )
+                for tile_vec, tile_rvec, active, new_rem, rem_key in tiles_for(rem):
+                    # child tile (everything still inside) must fit level l-1
+                    if child_cap_words is not None:
+                        words = child_words(child_is_shared, new_rem, rem_key)
+                        if double:
+                            words *= 2
+                        if words > child_cap_words:
+                            continue
+                    new_rvec = tuple(r * f for r, f in zip(rvec, tile_rvec))
+                    if prune and incumbent != math.inf:
+                        optimistic = (
+                            cost + mac_e + lb_here
+                            + lb_below(l, new_rem, new_rvec)
+                        )
+                        if optimistic > incumbent:
+                            continue
+                    cands = cands_for(active)
+                    if (
+                        budget is not None
+                        and groups
+                        and evaluated + n_rows + len(cands) > budget
+                    ):
+                        stop = True
+                        break
+                    new_til = til.copy()
+                    new_til[l] = tile_vec
+                    new_til[0] = [new_rem[d] for d in dims]
+                    g_til.append(new_til)
+                    g_odr.append(odr)
+                    sizes.append(len(cands))
+                    cand_rows.extend(order_row(c) for c in cands)
+                    n_rows += len(cands)
+                    groups.append((cost, odr, new_rem, new_rvec, cands))
+            if not groups:
+                return None
+            til_rows, odr_rows = assemble(g_til, g_odr, sizes, cand_rows, l)
+            energies = price_level(til_rows, odr_rows, l)
+            evaluated += n_rows
+            nxt: list[tuple[float, np.ndarray, np.ndarray, dict, tuple]] = []
+            start = 0
+            for gi, (cost, odr, new_rem, new_rvec, cands) in enumerate(groups):
+                k = sizes[gi]
+                j = start + int(np.argmin(energies[start : start + k]))
+                new_odr = odr.copy()
+                new_odr[l] = cand_rows[j]
+                nxt.append(
+                    (cost + float(energies[j]), g_til[gi], new_odr,
+                     new_rem, new_rvec)
+                )
+                start += k
+            nxt.sort(key=lambda x: x[0])
+            # dedup identical remainders (keep the cheapest) for beam diversity
+            seen: set[tuple] = set()
+            deduped: list[tuple] = []
+            for e in nxt:
+                rkey = tuple(e[3][d] for d in dims)
+                if rkey in seen:
+                    continue
+                seen.add(rkey)
+                deduped.append(e)
+            entries = deduped[:width]
+
+        # finalize: level-0 factors = remainder; optimize level-0 order.
+        g_til, g_odr, sizes, cand_rows = [], [], [], []
+        n_rows = 0
+        for cost, til, odr, rem, _rvec in entries:
+            active = tuple(d for d in dims if rem[d] > 1)
+            cands = cands_for(active)
+            if (
+                budget is not None
+                and g_til
+                and evaluated + n_rows + len(cands) > budget
+            ):
+                break
+            g_til.append(til)
+            g_odr.append(odr)
+            sizes.append(len(cands))
+            cand_rows.extend(order_row(c) for c in cands)
+            n_rows += len(cands)
+        if not g_til:
+            return None
+        til_rows, odr_rows = assemble(g_til, g_odr, sizes, cand_rows, 0)
+        energies = price_full(til_rows, odr_rows)
+        evaluated += n_rows
+        j = int(np.argmin(energies))
+        return evaluate(sched_from(til_rows[j], odr_rows[j]), tbl)
+
+    # Greedy dive establishes the branch-and-bound incumbent cheaply.
+    dive_rep: Report | None = None
+    incumbent = math.inf
+    if prune:
+        dive_rep = run(1, math.inf)
+        if dive_rep is not None:
+            incumbent = dive_rep.energy_pj
+    best = run(beam, incumbent)
+    if best is None:
+        best = dive_rep
     if best is None:
         raise ValueError("no feasible blocking fits the memory hierarchy")
+    if dive_rep is not None and dive_rep.energy_pj < best.energy_pj:
+        best = dive_rep
     return SearchResult(best=best, evaluated=evaluated)

@@ -55,12 +55,19 @@ class CostTable:
     hop_pj: float = HOP_PJ
 
     @classmethod
-    def asic_28nm(cls, schedule: Schedule) -> "CostTable":
+    def for_levels(cls, levels) -> "CostTable":
+        """Paper Table 3 energies for a hierarchy, independent of any
+        schedule — build once per hardware config and share across the
+        whole layer/blocking sweep (the table depends only on capacities)."""
         return cls(
             level_pj=tuple(
-                asic_access_energy_pj(lvl.capacity_bytes) for lvl in schedule.levels
+                asic_access_energy_pj(lvl.capacity_bytes) for lvl in levels
             )
         )
+
+    @classmethod
+    def asic_28nm(cls, schedule: Schedule) -> "CostTable":
+        return cls.for_levels(schedule.levels)
 
 
 # TPU v5e constants (per chip) — shared with benchmarks/roofline.py.

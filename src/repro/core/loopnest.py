@@ -53,6 +53,15 @@ class TensorRef:
             rel.add(filt)
         return frozenset(rel)
 
+    def key(self) -> tuple:
+        """Hashable structural identity (name excluded): used by search memos
+        so repeated layer shapes in a network are solved once."""
+        return (
+            self.dims,
+            tuple(sorted(self.coupled.items())),
+            self.output,
+        )
+
     def tile_elems(self, tile: Mapping[str, int]) -> int:
         """Elements of this tensor needed for a given iteration-space tile."""
         n = 1
@@ -84,6 +93,16 @@ class LoopNest:
         outs = [t for t in self.tensors if t.output]
         if len(outs) != 1:
             raise ValueError("exactly one output tensor required")
+
+    def key(self) -> tuple:
+        """Hashable structural identity: nests with equal keys have identical
+        search spaces and costs regardless of `name` (networks repeat layer
+        shapes, so the optimizer's memo solves each shape once)."""
+        return (
+            tuple(self.bounds.items()),
+            tuple(t.key() for t in self.tensors),
+            tuple(sorted(self.reduction_dims)),
+        )
 
     @property
     def dims(self) -> tuple[str, ...]:

@@ -21,7 +21,7 @@ from typing import Sequence
 
 from repro.core.blocking import SearchResult, search_blocking
 from repro.core.dataflow import Dataflow, make_dataflow
-from repro.core.energy import Report
+from repro.core.energy import CostTable, Report
 from repro.core.loopnest import LoopNest
 from repro.core.schedule import ArraySpec, MemLevel
 
@@ -110,27 +110,63 @@ def ck_dataflow(nest: LoopNest, array: ArraySpec) -> Dataflow:
     return make_dataflow(nest, array, tuple(primaries), replication=True)
 
 
+# Blocking searches memoized across the hardware sweep: networks repeat
+# layer shapes (and sweeps revisit hierarchies), so each structurally
+# identical (nest, levels, dataflow, search-params) instance is solved once.
+_SEARCH_CACHE: dict[tuple, SearchResult] = {}
+
+
+def clear_search_cache() -> None:
+    _SEARCH_CACHE.clear()
+
+
 def optimize_layer(
     nest: LoopNest,
     hw: HardwareConfig,
     dataflow: Dataflow | None = None,
-    max_evals: int = 2500,
+    max_evals: int = 0,  # 0 = exhaustive beam search; >0 caps mappings priced
+    table: CostTable | None = None,
+    beam: int = 24,
+    cache: bool = True,
 ) -> LayerResult:
     df = dataflow or ck_dataflow(nest, hw.array)
-    res: SearchResult = search_blocking(
-        nest, hw.levels(), hw.array, df, max_evals=max_evals
+    levels = hw.levels()
+    tbl = table or CostTable.for_levels(levels)
+    key = (
+        nest.key(), levels, hw.array.dims, df.assigns, beam, max_evals,
+        tbl.level_pj, tbl.mac_pj, tbl.hop_pj,
     )
-    return LayerResult(nest=nest, report=res.best, dataflow=df)
+    res = _SEARCH_CACHE.get(key) if cache else None
+    if res is None:
+        res = search_blocking(
+            nest, levels, hw.array, df, table=tbl,
+            beam=beam, max_evals=max_evals,
+        )
+        if cache:
+            _SEARCH_CACHE[key] = res
+    rep = res.best
+    if rep.schedule.nest is not nest:
+        # structural cache hit from an identically-shaped layer: re-label the
+        # schedule with this layer's nest so names in reports stay correct
+        rep = dataclasses.replace(
+            rep, schedule=dataclasses.replace(rep.schedule, nest=nest)
+        )
+    return LayerResult(nest=nest, report=rep, dataflow=df)
 
 
 def evaluate_network(
     layers: Sequence[LoopNest],
     hw: HardwareConfig,
-    max_evals_per_layer: int = 2500,
+    max_evals_per_layer: int = 0,
 ) -> NetworkResult:
+    # One hierarchy -> one cost table, shared across every layer search.
+    table = CostTable.for_levels(hw.levels())
     return NetworkResult(
         hw=hw,
-        layers=[optimize_layer(n, hw, max_evals=max_evals_per_layer) for n in layers],
+        layers=[
+            optimize_layer(n, hw, max_evals=max_evals_per_layer, table=table)
+            for n in layers
+        ],
     )
 
 
@@ -162,7 +198,7 @@ def candidate_hierarchies(
         for rf_levels in rf_levels_opts:
             for buf in BUF_CHOICES:
                 total_rf = rf_levels[-1] * n_pe
-                if not (lo <= buf / total_rf or buf >= total_rf):
+                if not (lo <= buf / total_rf <= hi):
                     continue
                 out.append(
                     HardwareConfig(
@@ -179,7 +215,7 @@ def optimize_network(
     layers: Sequence[LoopNest],
     array: ArraySpec,
     two_level_rf: bool = False,
-    max_evals_per_layer: int = 1200,
+    max_evals_per_layer: int = 0,
     hw_candidates: Sequence[HardwareConfig] | None = None,
 ) -> NetworkResult:
     """The efficient optimizer: search hardware x blocking under Obs 1+2."""

@@ -76,10 +76,14 @@ class AccessCounts:
         return sum(self.reads[level].values()) + sum(self.writes[level].values())
 
 
-def _stationarity(schedule: Schedule, tensor: TensorRef, level: int) -> int:
+def stationarity(schedule: Schedule, tensor: TensorRef, level: int) -> int:
     """Product of trips of consecutive innermost loops irrelevant to tensor,
     walking upward from the level-`level` boundary.  Trip-1 loops are
-    transparent (they do not break stationarity)."""
+    transparent (they do not break stationarity).
+
+    This (with `reloads`) is the semantic definition the batched engine in
+    costmodel.py vectorizes; keep the two in lockstep.
+    """
     rel = tensor.relevant
     reuse = 1
     for dim, trip in schedule.loops_at_and_above(level):
@@ -91,11 +95,17 @@ def _stationarity(schedule: Schedule, tensor: TensorRef, level: int) -> int:
     return reuse
 
 
-def _reloads(schedule: Schedule, tensor: TensorRef, level: int) -> int:
+def reloads(schedule: Schedule, tensor: TensorRef, level: int) -> int:
+    """Times the level-`level` child tile of `tensor` is re-streamed."""
     total = 1
     for _, trip in schedule.loops_at_and_above(level):
         total *= trip
-    return total // _stationarity(schedule, tensor, level)
+    return total // stationarity(schedule, tensor, level)
+
+
+# Backwards-compatible private aliases.
+_stationarity = stationarity
+_reloads = reloads
 
 
 def analyze(schedule: Schedule) -> AccessCounts:

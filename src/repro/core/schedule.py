@@ -204,6 +204,31 @@ class Schedule:
                 return False
         return True
 
+    def key(self) -> tuple:
+        """Hashable structural identity: two schedules with equal keys have
+        identical access counts/energy.  Used by the search memo caches."""
+        return (
+            self.nest.key(),
+            self.levels,
+            tuple((d, self.tiling[d]) for d in self.nest.dims),
+            self.order,
+            self.array.dims,
+            self.spatial,
+            self.word_bytes,
+        )
+
+    def as_arrays(self) -> tuple[list[list[int]], list[list[int]]]:
+        """(tiling, order-index) matrices for the batched cost engine.
+
+        Both are L x D nested lists, level 0 first; order rows hold indices
+        into `nest.dims`, innermost-first.  See costmodel.BatchedCostModel.
+        """
+        dims = self.nest.dims
+        idx = {d: i for i, d in enumerate(dims)}
+        til = [[self.tiling[d][l] for d in dims] for l in range(len(self.levels))]
+        orders = [[idx[d] for d in self.order[l]] for l in range(len(self.levels))]
+        return til, orders
+
     def describe(self) -> str:
         """Human-readable schedule, paper-style."""
         lines = [f"nest {self.nest.name}: bounds {dict(self.nest.bounds)}"]

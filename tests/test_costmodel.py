@@ -1,0 +1,232 @@
+"""Differential tests: the batched cost engine vs the scalar oracle.
+
+The batched engine (costmodel.py) must match `analyze()`/`evaluate()`
+*bit-exactly* on every schedule — counts are integers and the float
+accumulation order is mirrored.  Randomized property sweep in the spirit of
+the hypothesis suite in test_reuse_model.py (pure `random` so the test runs
+without the hypothesis package).
+"""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.blocking import _level_energy, search_blocking
+from repro.core.costmodel import BatchedCostModel, BatchOverflowError
+from repro.core.dataflow import Dataflow, make_dataflow
+from repro.core.energy import CostTable, evaluate
+from repro.core.loopnest import conv_nest, fc_nest, matmul_nest
+from repro.core.reuse import analyze
+from repro.core.schedule import ArraySpec, MemLevel, Schedule
+
+
+def _rand_splits(rng, bound, n):
+    out = []
+    rem = bound
+    for _ in range(n - 1):
+        divs = [d for d in range(1, rem + 1) if rem % d == 0]
+        f = rng.choice(divs)
+        out.append(f)
+        rem //= f
+    out.append(rem)
+    return tuple(out)
+
+
+def _random_case(rng):
+    kind = rng.choice(["conv", "mm", "fc"])
+    if kind == "conv":
+        nest = conv_nest(
+            "r",
+            B=rng.choice([1, 2]), K=rng.choice([1, 2, 4]),
+            C=rng.choice([1, 2, 3]), X=rng.choice([1, 2, 4]),
+            Y=rng.choice([1, 2]), FX=rng.choice([1, 3]),
+            FY=rng.choice([1, 2]), stride=rng.choice([1, 2]),
+        )
+    elif kind == "mm":
+        nest = matmul_nest(
+            "r", M=rng.choice([2, 4]), N=rng.choice([2, 4]),
+            K=rng.choice([2, 8]),
+        )
+    else:
+        nest = fc_nest("r", B=2, C=4, K=4)
+    L = rng.choice([2, 3, 4])
+    ppe = rng.choice([0, 1]) if L >= 3 else 0
+    levels = tuple(
+        MemLevel(
+            f"L{i}", None, double_buffered=False, per_pe=(i < ppe),
+            bandwidth_words_per_cycle=rng.choice([float("inf"), 4.0]),
+        )
+        for i in range(L)
+    )
+    if rng.random() < 0.5:
+        arr = ArraySpec(dims=(2, 2))
+        big = [d for d in nest.dims if nest.bounds[d] > 1]
+        prim = rng.sample(big, k=min(2, len(big))) if big else list(nest.dims)[:2]
+        while len(prim) < 2:
+            prim.append(nest.dims[0])
+        df = make_dataflow(nest, arr, tuple(prim),
+                           replication=rng.random() < 0.5)
+        spatial = df.assigns
+    else:
+        arr = ArraySpec(dims=(1,))
+        spatial = ((),)
+    spf = {d: 1 for d in nest.dims}
+    for a in spatial:
+        for d, s in a:
+            spf[d] *= s
+    tiling = {
+        d: _rand_splits(rng, math.ceil(nest.bounds[d] / spf[d]), L)
+        for d in nest.dims
+    }
+    orders = tuple(
+        tuple(rng.sample(list(nest.dims), len(nest.dims))) for _ in range(L)
+    )
+    return Schedule(
+        nest=nest, levels=levels, tiling=tiling, order=orders,
+        array=arr, spatial=spatial,
+    )
+
+
+def test_batched_matches_scalar_randomized():
+    """Property sweep: exact equality of every reported quantity."""
+    rng = random.Random(1234)
+    checked = 0
+    while checked < 60:
+        try:
+            s = _random_case(rng)
+        except ValueError:
+            continue
+        rep = evaluate(s)
+        acc = rep.access
+        cm = BatchedCostModel(
+            s.nest, s.levels, array=s.array, spatial=s.spatial
+        )
+        til, odr = cm.pack([s])
+        b = cm.evaluate(til, odr)
+        assert b.energy_pj[0] == rep.energy_pj
+        assert b.cycles[0] == rep.cycles
+        assert b.utilization[0] == rep.utilization
+        for l in range(len(s.levels)):
+            for t_i, t in enumerate(s.nest.tensors):
+                assert b.reads[0, l, t_i] == acc.reads[l][t.name]
+                assert b.writes[0, l, t_i] == acc.writes[l][t.name]
+        for t_i, t in enumerate(s.nest.tensors):
+            assert b.hops[0, t_i] == acc.hops[t.name]
+        checked += 1
+
+
+def test_batched_level_energy_matches_scalar():
+    rng = random.Random(7)
+    checked = 0
+    while checked < 20:
+        try:
+            s = _random_case(rng)
+        except ValueError:
+            continue
+        tbl = CostTable.for_levels(s.levels)
+        cm = BatchedCostModel(
+            s.nest, s.levels, array=s.array, spatial=s.spatial, table=tbl
+        )
+        til, odr = cm.pack([s])
+        for l in range(len(s.levels)):
+            assert cm.level_energy(til, odr, l)[0] == _level_energy(s, tbl, l)
+        checked += 1
+
+
+def test_batched_batch_consistency():
+    """A batch of n schedules prices identically to n batches of 1."""
+    rng = random.Random(99)
+    nest = conv_nest("t", B=2, K=4, C=4, X=4, Y=4, FX=3, FY=3)
+    levels = (
+        MemLevel("RF", None, double_buffered=False, per_pe=True),
+        MemLevel("BUF", None),
+        MemLevel("DRAM", None),
+    )
+    scheds = []
+    while len(scheds) < 16:
+        tiling = {d: _rand_splits(rng, nest.bounds[d], 3) for d in nest.dims}
+        orders = tuple(
+            tuple(rng.sample(list(nest.dims), len(nest.dims)))
+            for _ in range(3)
+        )
+        scheds.append(
+            Schedule(nest=nest, levels=levels, tiling=tiling, order=orders)
+        )
+    cm = BatchedCostModel(nest, levels)
+    til, odr = cm.pack(scheds)
+    batch = cm.energy(til, odr)
+    singles = [cm.energy(til[i : i + 1], odr[i : i + 1])[0] for i in range(16)]
+    assert list(batch) == singles
+    assert singles == [evaluate(s).energy_pj for s in scheds]
+
+
+def test_search_engines_identical():
+    """Batched and scalar search paths return the same best schedule."""
+    nest = conv_nest("t", B=2, K=16, C=16, X=8, Y=8, FX=3, FY=3)
+    levels = (
+        MemLevel("RF", 512, double_buffered=False, per_pe=True),
+        MemLevel("BUF", 64 * 1024),
+        MemLevel("DRAM", None),
+    )
+    arr = ArraySpec(dims=(4, 4))
+    df = make_dataflow(nest, arr, ("C", "K"))
+    rb = search_blocking(nest, levels, arr, df, beam=8, engine="batched")
+    rs = search_blocking(nest, levels, arr, df, beam=8, engine="scalar")
+    assert rb.best.energy_pj == rs.best.energy_pj
+    assert rb.evaluated == rs.evaluated
+    assert rb.best.schedule.tiling == rs.best.schedule.tiling
+    assert rb.best.schedule.order == rs.best.schedule.order
+
+
+def test_search_prune_preserves_best():
+    nest = conv_nest("t", B=2, K=16, C=16, X=8, Y=8, FX=3, FY=3)
+    levels = (
+        MemLevel("RF", 512, double_buffered=False, per_pe=True),
+        MemLevel("BUF", 64 * 1024),
+        MemLevel("DRAM", None),
+    )
+    arr = ArraySpec(dims=(4, 4))
+    df = make_dataflow(nest, arr, ("C", "K"))
+    pruned = search_blocking(nest, levels, arr, df, beam=8, prune=True)
+    full = search_blocking(nest, levels, arr, df, beam=8, prune=False)
+    assert pruned.best.energy_pj <= full.best.energy_pj
+    assert pruned.evaluated <= full.evaluated + 10000  # dive overhead bounded
+
+
+def test_max_evals_budget_enforced():
+    nest = conv_nest("t", B=2, K=16, C=16, X=8, Y=8, FX=3, FY=3)
+    levels = (
+        MemLevel("RF", 512, double_buffered=False, per_pe=True),
+        MemLevel("BUF", 64 * 1024),
+        MemLevel("DRAM", None),
+    )
+    arr = ArraySpec(dims=(4, 4))
+    df = make_dataflow(nest, arr, ("C", "K"))
+    unlimited = search_blocking(nest, levels, arr, df, beam=8, prune=False)
+    assert unlimited.evaluated > 500
+    capped = search_blocking(
+        nest, levels, arr, df, beam=8, prune=False, max_evals=500
+    )
+    # the budget may overshoot by at most one frontier group's order set
+    assert capped.evaluated <= 500 + 64
+    assert capped.best.schedule.fits()
+
+
+def test_overflow_guard_falls_back():
+    """Nests whose counts could overflow int64 must reject batching at
+    construction (no silent wraparound for direct users)."""
+    nest = matmul_nest("huge", M=2 ** 20, N=2 ** 20, K=2 ** 20)
+    levels = (
+        MemLevel("BUF", None, double_buffered=False),
+        MemLevel("DRAM", None),
+    )
+    with pytest.raises(BatchOverflowError):
+        BatchedCostModel(nest, levels)
+    # the search still completes through the scalar oracle
+    res = search_blocking(
+        nest, levels, ArraySpec(dims=(1,)), Dataflow(assigns=((),)),
+        beam=2, max_choices_per_level=4, max_evals=50,
+    )
+    assert res.best.energy_pj > 0

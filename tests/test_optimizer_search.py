@@ -1,0 +1,118 @@
+"""Optimizer-level tests: Obs-2 ratio-band pruning, search memoization
+across the hardware sweep, and the end-to-end regression that the rewritten
+(batched + pruned + deduped) search returns the same best energies as the
+seed scalar implementation.
+"""
+
+import pytest
+
+from repro.core.loopnest import conv_nest, fc_nest
+from repro.core.optimizer import (
+    BUF_CHOICES,
+    RF_CHOICES,
+    HardwareConfig,
+    _SEARCH_CACHE,
+    candidate_hierarchies,
+    clear_search_cache,
+    evaluate_network,
+    optimize_layer,
+    optimize_network,
+)
+from repro.core.schedule import ArraySpec
+
+ARR16 = ArraySpec(dims=(16, 16))
+
+
+# ------------------------------------------------------------ Obs-2 pruning
+
+
+def test_ratio_band_actually_prunes():
+    """The buf/total-RF band must be enforced on both sides (the seed's
+    filter was a tautology and never pruned)."""
+    cands = candidate_hierarchies(ARR16, two_level_rf=False)
+    assert cands
+    # strictly fewer than the unpruned cross product
+    assert len(cands) < len(RF_CHOICES) * len(BUF_CHOICES)
+    for hw in cands:
+        ratio = hw.buffer_bytes[0] / (hw.rf_bytes[-1] * ARR16.num_pes)
+        assert 4 <= ratio <= 16, hw.name
+
+
+def test_ratio_band_candidate_counts():
+    """Counts follow directly from the band arithmetic on the choice grids."""
+    assert len(candidate_hierarchies(ARR16, two_level_rf=False)) == 14
+    assert len(candidate_hierarchies(ARR16, two_level_rf=True)) == 32
+
+
+def test_two_level_rf_band():
+    for hw in candidate_hierarchies(ARR16, two_level_rf=True):
+        if len(hw.rf_bytes) == 2:
+            ratio = hw.rf_bytes[1] / hw.rf_bytes[0]
+            assert 4 <= ratio <= 16
+
+
+# ----------------------------------------------------------- memoization
+
+
+def test_layer_search_memoized_across_sweep():
+    clear_search_cache()
+    arr = ArraySpec(dims=(4, 4))
+    hw = HardwareConfig("hw", arr, rf_bytes=(64,), buffer_bytes=(32 * 1024,))
+    a = conv_nest("a", B=1, K=8, C=8, X=8, Y=8, FX=3, FY=3)
+    b = conv_nest("b", B=1, K=8, C=8, X=8, Y=8, FX=3, FY=3)  # same shape
+    r1 = optimize_layer(a, hw, max_evals=0)
+    n_after_first = len(_SEARCH_CACHE)
+    r2 = optimize_layer(b, hw, max_evals=0)
+    assert len(_SEARCH_CACHE) == n_after_first  # structural hit, no new entry
+    assert r1.report.energy_pj == r2.report.energy_pj
+    # different hierarchy -> new entry
+    hw2 = HardwareConfig("hw2", arr, rf_bytes=(128,), buffer_bytes=(64 * 1024,))
+    optimize_layer(a, hw2, max_evals=0)
+    assert len(_SEARCH_CACHE) == n_after_first + 1
+    clear_search_cache()
+
+
+# ----------------------------------------------------------- regression
+
+
+def test_optimize_network_matches_seed_energy():
+    """End-to-end regression: the batched+pruned optimizer returns exactly
+    the energies the seed scalar implementation produced on this net
+    (captured from the pre-rewrite code with an unlimited eval budget)."""
+    layers = [
+        conv_nest("c1", B=1, K=8, C=8, X=8, Y=8, FX=3, FY=3),
+        conv_nest("c2", B=1, K=16, C=8, X=8, Y=8, FX=3, FY=3),
+        conv_nest("c1b", B=1, K=8, C=8, X=8, Y=8, FX=3, FY=3),
+        fc_nest("f1", B=1, C=64, K=32),
+    ]
+    arr = ArraySpec(dims=(4, 4))
+    hws = [
+        HardwareConfig("hwA", arr, rf_bytes=(64,), buffer_bytes=(32 * 1024,)),
+        HardwareConfig("hwB", arr, rf_bytes=(128,), buffer_bytes=(64 * 1024,)),
+    ]
+    clear_search_cache()
+    res = optimize_network(layers, arr, hw_candidates=hws,
+                           max_evals_per_layer=0)
+    assert res.hw.name == "hwA"
+    assert res.total_energy_pj == pytest.approx(1976486.24, abs=1e-6, rel=0)
+    per_layer = [l.report.energy_pj for l in res.layers]
+    assert per_layer == pytest.approx(
+        [423484.16, 686968.32, 423484.16, 442549.6], abs=1e-6, rel=0
+    )
+    # the repeated c1 shape must have been solved once
+    assert [l.report.energy_pj for l in res.layers][0] == per_layer[2]
+    clear_search_cache()
+
+
+def test_evaluate_network_budget_plumbed():
+    """max_evals_per_layer reaches the search as a real budget."""
+    layers = [conv_nest("c", B=1, K=16, C=16, X=8, Y=8, FX=3, FY=3)]
+    arr = ArraySpec(dims=(4, 4))
+    hw = HardwareConfig("hw", arr, rf_bytes=(64,), buffer_bytes=(32 * 1024,))
+    clear_search_cache()
+    full = evaluate_network(layers, hw, max_evals_per_layer=0)
+    clear_search_cache()
+    tight = evaluate_network(layers, hw, max_evals_per_layer=300)
+    clear_search_cache()
+    assert tight.total_energy_pj >= full.total_energy_pj
+    assert tight.layers[0].report.schedule.fits()

@@ -8,6 +8,8 @@ checked on hand-built schedules and hypothesis-randomized ones.
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.loopnest import conv_nest, fc_nest, matmul_nest
