@@ -1,0 +1,26 @@
+# Repro convenience targets.  PYTHONPATH is injected everywhere so targets
+# work from a clean checkout with no install step.
+
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench bench-mapper bench-simulate bench-dse
+
+# tier-1 verify: the full suite (matches ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# skip the multi-minute system/validation tests
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# all perf benchmarks: BENCH_mapper.json, BENCH_simulate.json, BENCH_dse.json
+bench: bench-mapper bench-simulate bench-dse
+
+bench-mapper:
+	$(PY) -m benchmarks.perf_compare --mapper
+
+bench-simulate:
+	$(PY) -m benchmarks.perf_compare --simulate
+
+bench-dse:
+	$(PY) -m benchmarks.perf_compare --dse

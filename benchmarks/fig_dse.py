@@ -1,0 +1,196 @@
+"""Fig 10-12 analogue: iso-throughput memory-resource-allocation sweep.
+
+Reproduces the paper's headline §6.3 experiment end-to-end on the DSE suite
+(CNN + LSTM + MLP, core/networks.py): sweep every Obs-2 candidate memory
+hierarchy (one- and two-level register files x buffer sizes) on a fixed
+16x16 PE array, and report how much energy the best allocation saves over
+an Eyeriss-like baseline allocation at constant throughput (the paper
+measures up to 4.2x for CNNs, 1.6x for LSTMs, 1.8x for MLPs on the full
+benchmark suite).
+
+Two engines are timed on identical hierarchy grids:
+
+  * sequential — the existing `optimize_network` loop: one full blocking
+    search per (hierarchy x layer),
+  * batched    — `dse.sweep_allocations`: one shared frontier + counts pass
+    per (layer-shape x hierarchy-family), priced under every member's cost
+    table in a single 4-D call.
+
+Emits BENCH_dse.json.
+
+    PYTHONPATH=src python -m benchmarks.fig_dse [--out BENCH_dse.json]
+        [--workers N] [--cache PATH] [--skip-sequential]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.dse import (
+    best_at_iso_throughput,
+    pareto_prune,
+    sweep_allocations,
+)
+from repro.core.networks import DSE_SUITE
+from repro.core.optimizer import (
+    HardwareConfig,
+    candidate_hierarchies,
+    clear_search_cache,
+    optimize_network,
+)
+from repro.core.schedule import ArraySpec
+
+ARRAY = ArraySpec(dims=(16, 16))
+
+
+def baseline_hw() -> HardwareConfig:
+    """Eyeriss-like allocation on the sweep's array: 512 B RF, 128 KB buffer
+    (outside the Obs-2 ratio band — that imbalance is the point)."""
+    return HardwareConfig(
+        name="baseline-rf512-buf128k",
+        array=ARRAY,
+        rf_bytes=(512,),
+        buffer_bytes=(128 * 1024,),
+    )
+
+
+def run_network(
+    name: str,
+    layers,
+    hws,
+    *,
+    workers: int = 0,
+    cache=None,
+    skip_sequential: bool = False,
+) -> dict:
+    base = baseline_hw()
+    grid = list(hws) + [base]
+
+    t0 = time.perf_counter()
+    points = sweep_allocations(
+        layers, ARRAY, grid, workers=workers, cache=cache
+    )
+    t_batched = time.perf_counter() - t0
+
+    by_name = {p.hw.name: p for p in points}
+    base_pt = by_name.get(base.name)
+    if base_pt is None:
+        # sweep_allocations drops hierarchies with no feasible schedule
+        raise ValueError(
+            f"baseline hierarchy {base.name} is infeasible for network "
+            f"{name!r}; every ratio in this record depends on it"
+        )
+    best = min(points, key=lambda p: p.energy_pj)
+    try:
+        best_iso = best_at_iso_throughput(points, base_pt, slack=1.0)
+    except ValueError:
+        best_iso = base_pt
+    frontier = pareto_prune(points)
+
+    rec = {
+        "network": name,
+        "layers": len(layers),
+        "hierarchies": len(grid),
+        "batched_s": t_batched,
+        "design_points": len(points),
+        "baseline": {
+            "hw": base.name,
+            "energy_pj": base_pt.energy_pj,
+            "cycles": base_pt.cycles,
+        },
+        "best": {
+            "hw": best.hw.name,
+            "energy_pj": best.energy_pj,
+            "cycles": best.cycles,
+        },
+        "best_iso_throughput": {
+            "hw": best_iso.hw.name,
+            "energy_pj": best_iso.energy_pj,
+            "cycles": best_iso.cycles,
+        },
+        "energy_improvement": base_pt.energy_pj / best.energy_pj,
+        "energy_improvement_iso": base_pt.energy_pj / best_iso.energy_pj,
+        # Fig-12-style spread: how much the allocation choice matters at all
+        "energy_spread": max(p.energy_pj for p in points) / best.energy_pj,
+        "pareto": [
+            {"hw": p.hw.name, "energy_pj": p.energy_pj, "cycles": p.cycles}
+            for p in sorted(frontier, key=lambda p: p.energy_pj)
+        ],
+    }
+
+    if not skip_sequential:
+        clear_search_cache()
+        t0 = time.perf_counter()
+        seq = optimize_network(layers, ARRAY, hw_candidates=grid)
+        t_seq = time.perf_counter() - t0
+        rec["sequential_s"] = t_seq
+        rec["speedup"] = t_seq / t_batched
+        rec["sequential_best"] = {
+            "hw": seq.hw.name,
+            "energy_pj": seq.total_energy_pj,
+        }
+        rec["best_hw_agrees"] = seq.hw.name == best.hw.name
+        rec["best_energy_gap"] = best.energy_pj / seq.total_energy_pj - 1.0
+    return rec
+
+
+def run(
+    out_path: str,
+    workers: int = 0,
+    cache=None,
+    skip_sequential: bool = False,
+) -> dict:
+    hws = candidate_hierarchies(ARRAY, two_level_rf=True)
+    nets = {}
+    for name, maker in DSE_SUITE.items():
+        nets[name] = run_network(
+            name, maker(), hws,
+            workers=workers, cache=cache, skip_sequential=skip_sequential,
+        )
+        r = nets[name]
+        line = (
+            f"{name}: {r['hierarchies']} hierarchies, batched "
+            f"{r['batched_s']:.2f}s, improvement {r['energy_improvement']:.2f}x"
+            f" (iso {r['energy_improvement_iso']:.2f}x)"
+        )
+        if "speedup" in r:
+            line += (
+                f", sequential {r['sequential_s']:.2f}s "
+                f"-> speedup {r['speedup']:.1f}x "
+                f"(agree={r['best_hw_agrees']}, "
+                f"gap={r['best_energy_gap']*100:.2f}%)"
+            )
+        print(line)
+
+    result = {"array": list(ARRAY.dims), "networks": nets}
+    if not skip_sequential:
+        tb = sum(r["batched_s"] for r in nets.values())
+        ts = sum(r["sequential_s"] for r in nets.values())
+        result["total_batched_s"] = tb
+        result["total_sequential_s"] = ts
+        result["total_speedup"] = ts / tb
+        print(f"total: batched {tb:.2f}s, sequential {ts:.2f}s, "
+              f"speedup {ts/tb:.1f}x")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_dse.json")
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--cache", default=None,
+                    help="JSON cache path for incremental re-runs")
+    ap.add_argument("--skip-sequential", action="store_true",
+                    help="only run the batched sweep (no baseline timing)")
+    args = ap.parse_args()
+    run(args.out, workers=args.workers, cache=args.cache,
+        skip_sequential=args.skip_sequential)
+
+
+if __name__ == "__main__":
+    main()

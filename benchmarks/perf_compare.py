@@ -12,6 +12,17 @@ hardware sweep with seed-equivalent scalar search as the baseline) and
 emits BENCH_mapper.json:
 
     PYTHONPATH=src python -m benchmarks.perf_compare --mapper
+
+Simulate mode benchmarks the vectorized exact simulator against the
+per-iteration odometer on randomized schedules (bit-identical AccessCounts
+asserted) and emits BENCH_simulate.json:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --simulate
+
+DSE mode runs the iso-throughput resource-allocation sweep (benchmarks/
+fig_dse.py) and emits BENCH_dse.json:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --dse
 """
 
 from __future__ import annotations
@@ -183,6 +194,98 @@ def bench_network_sweep() -> dict:
     }
 
 
+# -------------------------------------------------------------- simulate ----
+
+
+def _random_sim_schedules(n: int, seed: int = 0) -> list:
+    """Randomized temporal schedules with 10^3-10^5 iterations each — big
+    enough that the odometer's per-iteration cost dominates, small enough
+    that the scalar baseline finishes."""
+    import random
+
+    from repro.core.loopnest import conv_nest, divisors, matmul_nest
+    from repro.core.schedule import MemLevel, Schedule
+
+    rng = random.Random(seed)
+    levels = (
+        MemLevel("RF", None, double_buffered=False, per_pe=True),
+        MemLevel("BUF", None),
+        MemLevel("DRAM", None),
+    )
+
+    def splits(bound: int, k: int) -> tuple[int, ...]:
+        out = []
+        rem = bound
+        for _ in range(k - 1):
+            f = rng.choice(divisors(rem))
+            out.append(f)
+            rem //= f
+        out.append(rem)
+        return tuple(out)
+
+    scheds = []
+    while len(scheds) < n:
+        if rng.random() < 0.5:
+            nest = conv_nest(
+                "sim",
+                B=rng.choice([1, 2]), K=rng.choice([4, 8, 16]),
+                C=rng.choice([4, 8]), X=rng.choice([4, 7]),
+                Y=rng.choice([4, 7]), FX=3, FY=3,
+            )
+        else:
+            nest = matmul_nest(
+                "sim", M=rng.choice([8, 16]), N=rng.choice([8, 16]),
+                K=rng.choice([16, 32]),
+            )
+        tiling = {d: splits(nest.bounds[d], 3) for d in nest.dims}
+        orders = tuple(
+            tuple(rng.sample(list(nest.dims), len(nest.dims)))
+            for _ in range(3)
+        )
+        scheds.append(
+            Schedule(nest=nest, levels=levels, tiling=tiling, order=orders)
+        )
+    return scheds
+
+
+def run_simulate(out_path: str, n: int = 40) -> dict:
+    """Schedules simulated per second: odometer vs mixed-radix engine."""
+    from repro.core.simulate import simulate
+
+    scheds = _random_sim_schedules(n)
+    iters = [s.temporal_trips() for s in scheds]
+
+    t0 = time.perf_counter()
+    scalar = [simulate(s, engine="scalar") for s in scheds]
+    t_scalar = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    vector = [simulate(s, engine="vector") for s in scheds]
+    t_vector = time.perf_counter() - t0
+
+    identical = scalar == vector
+    if not identical:
+        # not an assert: must hold under python -O too, and the JSON claim
+        # below is acceptance evidence
+        raise RuntimeError("vector simulator diverged from the odometer")
+    result = {
+        "schedules": n,
+        "total_iterations": sum(iters),
+        "max_iterations": max(iters),
+        "scalar_per_s": n / t_scalar,
+        "vector_per_s": n / t_vector,
+        "speedup": t_scalar / t_vector,
+        "bit_identical": identical,
+    }
+    print(f"simulate: {n} schedules ({sum(iters):.2e} total iters), "
+          f"scalar {n/t_scalar:.1f}/s, vector {n/t_vector:.0f}/s, "
+          f"speedup {t_scalar/t_vector:.0f}x")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {out_path}")
+    return result
+
+
 def run_mapper(out_path: str) -> dict:
     rate = bench_pricing_rate()
     sweep = bench_network_sweep()
@@ -207,13 +310,29 @@ def main():
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mapper", action="store_true",
                     help="benchmark the batched mapping cost engine")
-    ap.add_argument("--out", default="BENCH_mapper.json")
+    ap.add_argument("--simulate", action="store_true",
+                    help="benchmark the vectorized exact simulator")
+    ap.add_argument("--dse", action="store_true",
+                    help="run the resource-allocation DSE sweep benchmark")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="process-pool workers for the DSE sweep")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mapper:
-        run_mapper(args.out)
+        run_mapper(args.out or "BENCH_mapper.json")
+        return
+    if args.simulate:
+        run_simulate(args.out or "BENCH_simulate.json")
+        return
+    if args.dse:
+        from benchmarks.fig_dse import run as run_dse
+
+        run_dse(args.out or "BENCH_dse.json", workers=args.workers)
         return
     if not args.cell or not args.tag:
-        ap.error("--cell and --tag are required (or pass --mapper)")
+        ap.error(
+            "--cell and --tag are required (or pass --mapper/--simulate/--dse)"
+        )
     arch, shape, mesh = args.cell
     base = load(os.path.join(args.dir, f"{arch}__{shape}__{mesh}.json"))
     var = load(

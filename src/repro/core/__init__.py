@@ -3,9 +3,26 @@
 Public API surface re-exported for convenience; see DESIGN.md §3.
 """
 
-from repro.core.blocking import SearchResult, iter_blockings, search_blocking
-from repro.core.costmodel import BatchedCostModel, BatchOverflowError, BatchReport
+from repro.core.blocking import (
+    SearchResult,
+    enumerate_frontier,
+    iter_blockings,
+    search_blocking,
+)
+from repro.core.costmodel import (
+    BatchedCostModel,
+    BatchOverflowError,
+    BatchReport,
+    HierarchySweepReport,
+)
 from repro.core.dataflow import Dataflow, enumerate_dataflows, make_dataflow
+from repro.core.dse import (
+    DesignPoint,
+    SweepCache,
+    best_at_iso_throughput,
+    pareto_prune,
+    sweep_allocations,
+)
 from repro.core.energy import CostTable, Report, evaluate
 from repro.core.loopnest import (
     LoopNest,
@@ -31,11 +48,14 @@ from repro.core.simulate import simulate
 
 __all__ = [
     "AccessCounts", "ArraySpec", "BatchOverflowError", "BatchReport",
-    "BatchedCostModel", "CostTable", "Dataflow", "HardwareConfig",
-    "LoopNest", "MatmulTiles", "MemLevel", "NetworkResult", "Report",
-    "Schedule", "SearchResult", "TensorRef", "analyze", "choose_matmul_tiles",
-    "conv_nest", "depthwise_nest", "enumerate_dataflows", "evaluate",
+    "BatchedCostModel", "CostTable", "Dataflow", "DesignPoint",
+    "HardwareConfig", "HierarchySweepReport", "LoopNest", "MatmulTiles",
+    "MemLevel", "NetworkResult", "Report", "Schedule", "SearchResult",
+    "SweepCache", "TensorRef", "analyze", "best_at_iso_throughput",
+    "choose_matmul_tiles", "conv_nest", "depthwise_nest",
+    "enumerate_dataflows", "enumerate_frontier", "evaluate",
     "evaluate_network", "eyeriss_like", "fc_nest", "flat_schedule",
     "iter_blockings", "make_dataflow", "matmul_nest", "optimize_layer",
-    "optimize_network", "search_blocking", "simulate", "tpu_like",
+    "optimize_network", "pareto_prune", "search_blocking", "simulate",
+    "sweep_allocations", "tpu_like",
 ]

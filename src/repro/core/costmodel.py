@@ -67,6 +67,31 @@ class BatchReport:
     macs: int
 
 
+@dataclasses.dataclass(frozen=True)
+class HierarchySweepReport:
+    """One counts pass priced under H cost tables (the DSE inner product).
+
+    Access counts depend only on (tiling, order, spatial, per-PE structure)
+    — never on level capacities — so a whole iso-structure family of memory
+    hierarchies shares the count tensors and differs only in the final
+    ``level_totals @ level_pj`` contraction.  ``energy_pj[h, i]`` is
+    candidate i priced under hierarchy h's cost table, bit-identical to
+    ``evaluate()`` under that table.
+    """
+
+    energy_pj: np.ndarray         # (H, n) float64
+    cycles: np.ndarray            # (H, n) float64
+    # Count-side fields are hierarchy-independent for shared (n, L, D)
+    # candidates: (n, L) / (n,).  With per-hierarchy 4-D candidate blocks
+    # they gain a leading axis: (H, n, L) / (H, n).
+    level_totals: np.ndarray      # int64
+    footprint_words: np.ndarray   # int64 (un-doubled words, see
+    #                               footprint_words(): caller applies
+    #                               word_bytes and double-buffer factors)
+    utilization: np.ndarray       # float64
+    macs: int
+
+
 class BatchedCostModel:
     """Prices batches of candidate schedules sharing one (nest, hw, dataflow).
 
@@ -351,6 +376,118 @@ class BatchedCostModel:
             writes=writes,
             hops=hops,
             cycles=cycles,
+            utilization=util,
+            macs=self.macs,
+        )
+
+    # --------------------------------------------------- hierarchy sweeps --
+
+    def footprint_words(self, tilings: np.ndarray) -> np.ndarray:
+        """Vectorized Schedule.footprint_bytes, in raw words: (n, L) sums of
+        per-tensor tile elements at each level (spatial factors folded in at
+        and above the array boundary).  Callers apply ``word_bytes`` and each
+        hierarchy's double-buffer factor — those are the only parts of the
+        footprint that vary across an iso-structure hierarchy family."""
+        tilings = np.asarray(tilings, dtype=np.int64)
+        n = tilings.shape[0]
+        words = np.zeros((n, self.L), dtype=np.int64)
+        cum = np.cumprod(tilings, axis=1)
+        for l in range(self.L):
+            tile = cum[:, l, :]
+            if l >= self.boundary:
+                tile = tile * self.sp
+            for t_i in range(self.T):
+                words[:, l] += self._elems(t_i, tile)
+        return words
+
+    def evaluate_hierarchies(
+        self,
+        tilings: np.ndarray,
+        orders: np.ndarray,
+        tables: Sequence[CostTable],
+        bandwidths: np.ndarray | None = None,
+    ) -> HierarchySweepReport:
+        """Price one candidate frontier under H hierarchies' cost tables.
+
+        ``tilings``/``orders`` are the usual (n, L, D) arrays — or 4-D
+        (H, n, L, D) when each hierarchy brings its own candidates, in which
+        case counts are computed per hierarchy block.  ``bandwidths`` is an
+        optional (H, L) words-per-cycle array for the roofline (defaults to
+        the constructor levels' bandwidths for every hierarchy).
+        """
+        tilings = np.asarray(tilings, dtype=np.int64)
+        orders = np.asarray(orders, dtype=np.int64)
+        H = len(tables)
+        for tbl in tables:
+            if len(tbl.level_pj) != self.L:
+                raise ValueError("cost table does not match hierarchy depth")
+        if tilings.ndim == 4:
+            if tilings.shape[0] != H:
+                raise ValueError("4-D tilings must have one block per table")
+            parts = [
+                self.evaluate_hierarchies(
+                    tilings[h], orders[h], [tables[h]],
+                    None if bandwidths is None else bandwidths[h : h + 1],
+                )
+                for h in range(H)
+            ]
+            # count-side fields gain a leading hierarchy axis here — (H, n, L)
+            # and (H, n) — because each block has its own candidates, unlike
+            # the shared-candidate 3-D path where they are (n, L)/(n,)
+            return HierarchySweepReport(
+                energy_pj=np.concatenate([p.energy_pj for p in parts]),
+                cycles=np.concatenate([p.cycles for p in parts]),
+                level_totals=np.stack([p.level_totals for p in parts]),
+                footprint_words=np.stack(
+                    [p.footprint_words for p in parts]
+                ),
+                utilization=np.stack([p.utilization for p in parts]),
+                macs=self.macs,
+            )
+
+        n = tilings.shape[0]
+        if bandwidths is None:
+            bandwidths = np.tile(
+                [lvl.bandwidth_words_per_cycle for lvl in self.levels], (H, 1)
+            )
+        energy = np.empty((H, n))
+        cycles = np.empty((H, n))
+        level_totals = np.empty((n, self.L), dtype=np.int64)
+        util = np.empty(n)
+        for i in range(0, n, _CHUNK):
+            til, odr = tilings[i : i + _CHUNK], orders[i : i + _CHUNK]
+            reads, writes, padded, suffix = self._counts(til, odr)
+            hops = self._hops(reads, writes)
+            lt = reads.sum(axis=2) + writes.sum(axis=2)  # (chunk, L)
+            hsum = np.zeros(til.shape[0])
+            for t_i in range(self.T):
+                hsum = hsum + hops[:, t_i]
+            trips = suffix[:, 0].astype(np.float64)
+            sl = slice(i, i + til.shape[0])
+            level_totals[sl] = lt
+            util[sl] = (self.used_pes / self.array.num_pes) * (
+                self.macs / padded.prod(axis=1)
+            )
+            # same accumulation order as the scalar evaluate() under each
+            # table, so per-hierarchy energies stay bit-identical
+            for h, tbl in enumerate(tables):
+                tot = np.zeros(til.shape[0])
+                for l in range(self.L):
+                    tot = tot + lt[:, l] * tbl.level_pj[l]
+                energy[h, sl] = tot + (
+                    self.macs * tbl.mac_pj + hsum * tbl.hop_pj
+                )
+                cyc = trips.copy()
+                for l in range(self.L):
+                    bw = float(bandwidths[h, l])
+                    if math.isfinite(bw):
+                        cyc = np.maximum(cyc, lt[:, l] / bw)
+                cycles[h, sl] = cyc
+        return HierarchySweepReport(
+            energy_pj=energy,
+            cycles=cycles,
+            level_totals=level_totals,
+            footprint_words=self.footprint_words(tilings),
             utilization=util,
             macs=self.macs,
         )

@@ -20,10 +20,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 
 from repro.core import energy as en
 from repro.core.blocking import search_blocking
 from repro.core.dataflow import Dataflow
+from repro.core.jsonstore import atomic_write_json, load_json_dict
 from repro.core.loopnest import matmul_nest
 from repro.core.schedule import ArraySpec, MemLevel
 
@@ -59,6 +61,38 @@ class MatmulTiles:
         )
 
 
+# ------------------------------------------------------ tile-choice cache --
+# Two layers: functools.lru_cache in-process, plus an on-disk JSON store so
+# serving/tests across processes never re-run the blocking search for a
+# shape already solved.  Override the location with REPRO_TILE_CACHE
+# (set it to an empty string to disable persistence).
+
+_TILE_CACHE_ENV = "REPRO_TILE_CACHE"
+_TILE_CACHE_DEFAULT = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro-interstellar",
+    "matmul_tiles.json",
+)
+# Bump whenever the search or alignment logic changes, so stale entries from
+# an older algorithm are never served (the key embeds this token).
+_TILE_CACHE_SCHEMA = "v1"
+
+
+def _tile_cache_path() -> str | None:
+    path = os.environ.get(_TILE_CACHE_ENV, _TILE_CACHE_DEFAULT)
+    return path or None
+
+
+def _store_tile(path: str, key: str, t: MatmulTiles) -> None:
+    """Read-merge-replace so concurrent processes lose at most one entry;
+    the rename keeps the file always parseable."""
+    data = load_json_dict(path)
+    data[key] = [t.bm, t.bn, t.bk]
+    try:
+        atomic_write_json(path, data)
+    except OSError:
+        pass  # cache is best-effort; the search result is still returned
+
+
 @functools.lru_cache(maxsize=512)
 def choose_matmul_tiles(
     M: int,
@@ -72,8 +106,31 @@ def choose_matmul_tiles(
     Runs the paper's blocking search on the (VMEM, HBM) 2-level hierarchy of
     the matmul nest, then aligns the winning tile to (8, 128) register tiling
     and the 128x128 MXU.  Falls back to a bandwidth-balanced analytic tile
-    for degenerate shapes.
+    for degenerate shapes.  Results persist to an on-disk cache keyed by
+    (M, N, K, vmem_bytes, dtype_bytes) — see REPRO_TILE_CACHE above — with
+    the lru_cache as the in-process layer.
     """
+    path = _tile_cache_path()
+    key = f"{_TILE_CACHE_SCHEMA}:{M},{N},{K},{vmem_bytes},{dtype_bytes}"
+    if path:
+        got = load_json_dict(path).get(key)
+        # guard the value shape too: a corrupt entry falls back to the search
+        if isinstance(got, (list, tuple)) and len(got) == 3:
+            try:
+                return MatmulTiles(
+                    bm=int(got[0]), bn=int(got[1]), bk=int(got[2])
+                )
+            except (TypeError, ValueError):
+                pass
+    t = _search_matmul_tiles(M, N, K, vmem_bytes, dtype_bytes)
+    if path:
+        _store_tile(path, key, t)
+    return t
+
+
+def _search_matmul_tiles(
+    M: int, N: int, K: int, vmem_bytes: int, dtype_bytes: int
+) -> MatmulTiles:
     # Pad tiny dims up to hardware alignment before searching.
     Mp, Np, Kp = round_up(M, SUBLANES), round_up(N, LANES), round_up(K, LANES)
     nest = matmul_nest("mm", M=Mp, N=Np, K=Kp)

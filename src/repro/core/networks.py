@@ -139,6 +139,49 @@ def mlp_l(batch: int = 128) -> list[LoopNest]:
     ]
 
 
+# ------------------------------------------------------------- DSE suite ----
+# Scaled sweep workloads for the resource-allocation DSE (core/dse.py, paper
+# Fig 10-12): one representative per network class, with bounds chosen so a
+# full (hierarchy x layer x tiling x order) sweep finishes in benchmark
+# wall-clock while keeping the paper's shape signatures (deep conv stacks
+# with repeated layer shapes; wide single-matmul LSTM gates; tapering MLP).
+
+
+def dse_cnn(batch: int = 4) -> list[LoopNest]:
+    """Compact conv stack in the AlexNet/VGG mold (repeated mid-layers)."""
+    B = batch
+    return [
+        conv_nest("c1", B=B, K=32, C=8, X=28, Y=28, FX=3, FY=3),
+        conv_nest("c2", B=B, K=64, C=32, X=14, Y=14, FX=3, FY=3),
+        conv_nest("c2b", B=B, K=64, C=32, X=14, Y=14, FX=3, FY=3),
+        conv_nest("c3", B=B, K=64, C=64, X=7, Y=7, FX=3, FY=3),
+        fc_nest("fc", B=B, C=3136, K=256),
+    ]
+
+
+def dse_lstm(batch: int = 4) -> list[LoopNest]:
+    """LSTM-M-shaped gate matmul (paper: Google seq2seq embed 500) at a
+    sweep-tractable embedding."""
+    return lstm("dse_lstm", embed=256, batch=batch)
+
+
+def dse_mlp(batch: int = 32) -> list[LoopNest]:
+    """PRIME-style tapering MLP at sweep-tractable widths."""
+    B = batch
+    return [
+        fc_nest("fc1", B=B, C=784, K=512),
+        fc_nest("fc2", B=B, C=512, K=256),
+        fc_nest("fc3", B=B, C=256, K=16),
+    ]
+
+
+DSE_SUITE = {
+    "cnn": dse_cnn,
+    "lstm": dse_lstm,
+    "mlp": dse_mlp,
+}
+
+
 PAPER_BENCHMARKS = {
     "alexnet": alexnet,
     "vgg16": vgg16,

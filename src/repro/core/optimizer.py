@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor
 from typing import Sequence
 
 from repro.core.blocking import SearchResult, search_blocking
@@ -211,22 +213,56 @@ def candidate_hierarchies(
     return out
 
 
+def _eval_network_task(args) -> NetworkResult | None:
+    """Process-pool task: one hierarchy priced over the whole network
+    (module-level so it pickles; infeasible hierarchies return None)."""
+    layers, hw, max_evals = args
+    try:
+        return evaluate_network(layers, hw, max_evals)
+    except ValueError:
+        return None
+
+
 def optimize_network(
     layers: Sequence[LoopNest],
     array: ArraySpec,
     two_level_rf: bool = False,
     max_evals_per_layer: int = 0,
     hw_candidates: Sequence[HardwareConfig] | None = None,
+    workers: int = 0,
 ) -> NetworkResult:
-    """The efficient optimizer: search hardware x blocking under Obs 1+2."""
-    best: NetworkResult | None = None
-    for hw in hw_candidates or candidate_hierarchies(array, two_level_rf):
-        try:
-            res = evaluate_network(layers, hw, max_evals_per_layer)
-        except ValueError:
-            continue
-        if best is None or res.total_energy_pj < best.total_energy_pj:
-            best = res
+    """The efficient optimizer: search hardware x blocking under Obs 1+2.
+
+    ``workers > 0`` fans the per-hierarchy network evaluations out over a
+    ``concurrent.futures`` process pool (each worker keeps its own search
+    memo, so repeated layer shapes are still solved once per process).  For
+    capacity-only sweeps over many hierarchies, the hierarchy-batched engine
+    in core/dse.py is the much faster path: it shares one candidate frontier
+    and one counts pass across a whole iso-structure family.
+    """
+    cands = list(hw_candidates or candidate_hierarchies(array, two_level_rf))
+    tasks = [(list(layers), hw, max_evals_per_layer) for hw in cands]
+
+    def reduce_best(results) -> NetworkResult | None:
+        # streamed: only the running best NetworkResult stays alive
+        best: NetworkResult | None = None
+        for res in results:
+            if res is None:
+                continue
+            if best is None or res.total_energy_pj < best.total_energy_pj:
+                best = res
+        return best
+
+    if workers > 0:
+        # spawn (not fork): callers may have JAX or other thread pools
+        # live in the parent, and fork() under threads can deadlock
+        with ProcessPoolExecutor(
+            max_workers=workers,
+            mp_context=multiprocessing.get_context("spawn"),
+        ) as pool:
+            best = reduce_best(pool.map(_eval_network_task, tasks))
+    else:
+        best = reduce_best(_eval_network_task(t) for t in tasks)
     if best is None:
         raise ValueError("no feasible hardware configuration found")
     return best

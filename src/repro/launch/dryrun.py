@@ -228,6 +228,9 @@ def lower_compile(cell):
 
 def cost_of(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        # jax >= 0.4.30 returns a one-element list of per-program dicts
+        ca = ca[0] if ca else {}
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),

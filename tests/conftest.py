@@ -1,0 +1,15 @@
+"""Shared test fixtures."""
+
+import os
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_tile_cache(tmp_path_factory):
+    """Point the on-disk matmul-tile cache at a per-session tmp dir so tests
+    never read from (or pollute) the user's real ~/.cache.  An explicitly
+    exported REPRO_TILE_CACHE still wins."""
+    if "REPRO_TILE_CACHE" not in os.environ:
+        path = tmp_path_factory.mktemp("tile-cache") / "matmul_tiles.json"
+        os.environ["REPRO_TILE_CACHE"] = str(path)

@@ -40,6 +40,7 @@ def test_forward_and_loss(arch, key):
     assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_one_grad_step(arch, key):
     cfg = get(arch + "-smoke")

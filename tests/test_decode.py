@@ -13,6 +13,7 @@ from repro.configs.registry import ARCHS, get
 TOL = 0.06  # bf16 accumulation noise
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_decode_matches_forward(arch):
     key = jax.random.PRNGKey(0)

@@ -224,6 +224,7 @@ def test_blockwise_causal_skip_matches():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 def test_remat_policy_dots_same_loss():
     """remat_policy='dots' changes memory, not math."""
     import dataclasses

@@ -27,15 +27,49 @@ def _small_cfgs(steps=14, ckpt_dir=None, microbatches=1):
     return mcfg, dcfg, tcfg
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
-    mcfg, dcfg, tcfg = _small_cfgs(steps=14)
+    """Assert learning on held-out data, not on the per-step loss trace.
+
+    Each step's reported loss is measured on a *different* random batch, and
+    at this scale the batch-to-batch loss spread under near-init params
+    (~0.02-0.05 nats std) exceeds the expected improvement over a handful of
+    steps — so the old ``losses[-1] < losses[0]`` check was a coin flip (the
+    seed failure: 5.522 -> 5.534 while mean held-out loss improved).  Instead
+    compare the mean loss over a pool of fixed never-trained-on batches
+    before vs after training (30 steps moves it ~0.03 nats, an order of
+    magnitude above any numeric jitter); with fixed seeds this is
+    deterministic.
+    """
+    from repro.arch.model_zoo import build
+    from repro.data.pipeline import batch_at
+
+    steps = 30
+    mcfg, dcfg, tcfg = _small_cfgs(steps=steps)
+    model = build(mcfg)
+    held = [
+        {k: jnp.asarray(v) for k, v in batch_at(dcfg, 10_000 + i).items()}
+        for i in range(16)
+    ]
+    loss_fn = jax.jit(model.loss)
+
+    def held_out_loss(params):
+        return float(
+            np.mean([float(loss_fn(params, b["tokens"], b["labels"]))
+                     for b in held])
+        )
+
+    init = model.init(jax.random.PRNGKey(0))  # same seed train() uses
+    before = held_out_loss(init)
     out = train(mcfg, dcfg, tcfg)
     losses = out["losses"]
-    assert len(losses) == 14
-    assert losses[-1] < losses[0], f"no learning: {losses[0]} -> {losses[-1]}"
+    assert len(losses) == steps
     assert np.isfinite(losses).all()
+    after = held_out_loss(out["final_params"])
+    assert after < before, f"no learning: held-out {before} -> {after}"
 
 
+@pytest.mark.slow
 def test_microbatched_step_matches_plain():
     """Grad accumulation over microbatches must match the single-batch step."""
     from repro.arch.model_zoo import build
@@ -64,6 +98,7 @@ def test_microbatched_step_matches_plain():
     assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=2e-2)
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_equivalence(tmp_path):
     """Crash after 10 steps + resume == uninterrupted run (deterministic
     data) - the core fault-tolerance property."""
