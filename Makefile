@@ -3,7 +3,13 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench bench-mapper bench-simulate bench-dse
+# ruff format is adopted incrementally: new code must be format-clean, the
+# pre-lint tree is only `ruff check`ed (see README.md §CI)
+FMT_PATHS := src/repro/serve benchmarks/serve_bench.py \
+             benchmarks/check_regress.py tests/test_serve_engine.py
+
+.PHONY: test test-fast lint validate bench bench-mapper bench-simulate \
+        bench-dse bench-serve bench-check
 
 # tier-1 verify: the full suite (matches ROADMAP.md)
 test:
@@ -13,8 +19,20 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
-# all perf benchmarks: BENCH_mapper.json, BENCH_simulate.json, BENCH_dse.json
-bench: bench-mapper bench-simulate bench-dse
+lint:
+	ruff check .
+	ruff format --check $(FMT_PATHS)
+
+# the model==simulator oracle (CI smoke job)
+validate:
+	$(PY) -m benchmarks.run --only validation
+
+# guard the committed BENCH_*.json speedups against silent regression
+bench-check:
+	$(PY) -m benchmarks.check_regress
+
+# all perf benchmarks: BENCH_{mapper,simulate,dse,serve}.json
+bench: bench-mapper bench-simulate bench-dse bench-serve
 
 bench-mapper:
 	$(PY) -m benchmarks.perf_compare --mapper
@@ -24,3 +42,6 @@ bench-simulate:
 
 bench-dse:
 	$(PY) -m benchmarks.perf_compare --dse
+
+bench-serve:
+	$(PY) -m benchmarks.serve_bench

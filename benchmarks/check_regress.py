@@ -1,0 +1,107 @@
+"""Guard the committed BENCH_*.json speedups against silent regression.
+
+Re-measures the PR-1 batched-pricing engine and the PR-2 vectorized
+simulator on reduced budgets and compares against the committed
+BENCH_mapper.json / BENCH_simulate.json claims:
+
+    PYTHONPATH=src python -m benchmarks.check_regress [--full] [--tol 0.15]
+
+The tolerance is deliberately generous (default: fresh speedup must reach
+15% of the committed one) because CI runners are noisy and shared — the
+guard exists to catch the engine quietly falling back to a scalar path or
+losing an order of magnitude, not 2x jitter.  ``--full`` additionally
+re-runs the end-to-end optimize_network sweep (minutes).  Both fresh runs
+re-assert bit-identity against the scalar oracles, so correctness rot
+fails the guard too.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def _load(path: str) -> dict:
+    if not os.path.exists(path):
+        sys.exit(f"missing committed benchmark file: {path}")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _check(name: str, committed: float, fresh: float, tol: float) -> bool:
+    floor = committed * tol
+    ok = fresh >= floor
+    status = "ok  " if ok else "FAIL"
+    print(
+        f"[{status}] {name}: committed {committed:8.1f}x   "
+        f"fresh {fresh:8.1f}x   floor {floor:6.1f}x"
+    )
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.15,
+        help="fresh speedup must reach this fraction of the committed one",
+    )
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="also re-run the end-to-end optimize_network sweep (minutes)",
+    )
+    ap.add_argument("--mapper-json", default="BENCH_mapper.json")
+    ap.add_argument("--simulate-json", default="BENCH_simulate.json")
+    args = ap.parse_args()
+
+    from benchmarks import perf_compare
+
+    mapper = _load(args.mapper_json)
+    simulate = _load(args.simulate_json)
+    if not simulate.get("bit_identical", False):
+        sys.exit("committed BENCH_simulate.json lost bit_identical=true")
+    if not mapper["optimize_network"].get("identical_best", False):
+        sys.exit("committed BENCH_mapper.json lost identical_best=true")
+
+    failures = []
+
+    # PR 1: batched pricing rate (asserts batched == scalar internally)
+    fresh_rate = perf_compare.bench_pricing_rate()
+    if not _check(
+        "mapper pricing",
+        mapper["pricing"]["speedup"],
+        fresh_rate["speedup"],
+        args.tol,
+    ):
+        failures.append("mapper pricing")
+
+    # PR 2: vectorized simulator (raises if it diverges from the odometer)
+    with tempfile.TemporaryDirectory() as tmp:
+        fresh_sim = perf_compare.run_simulate(os.path.join(tmp, "sim.json"), n=16)
+    if not _check("simulate", simulate["speedup"], fresh_sim["speedup"], args.tol):
+        failures.append("simulate")
+
+    if args.full:
+        fresh_sweep = perf_compare.bench_network_sweep()
+        if not fresh_sweep["identical_best"]:
+            failures.append("sweep identical_best")
+        if not _check(
+            "optimize_network sweep",
+            mapper["optimize_network"]["speedup"],
+            fresh_sweep["speedup"],
+            args.tol,
+        ):
+            failures.append("optimize_network sweep")
+
+    if failures:
+        sys.exit(f"benchmark regression: {', '.join(failures)}")
+    print("bench-check: committed speedups hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ from __future__ import annotations
 import itertools
 
 from repro.core import ArraySpec, evaluate, make_dataflow
-from repro.core.blocking import iter_blockings, optimize_orders, search_blocking
+from repro.core.blocking import iter_blockings, search_blocking
 from repro.core.networks import alexnet_conv3
 from repro.core.schedule import MemLevel
 

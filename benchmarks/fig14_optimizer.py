@@ -7,7 +7,6 @@ C|K baseline at equal throughput; TOPs/W in the 0.35-1.85 range.
 
 from __future__ import annotations
 
-import math
 
 from benchmarks.common import cached_optimize_layer, network_energy
 from repro.core import ArraySpec

@@ -8,8 +8,7 @@ flows on CONV3 since channel dims are largest.
 
 from __future__ import annotations
 
-from repro.core import ArraySpec, enumerate_dataflows, make_dataflow
-from repro.core.dataflow import Dataflow
+from repro.core import ArraySpec, enumerate_dataflows
 from repro.core.networks import alexnet_conv3, googlenet_4c3r
 from repro.core.schedule import flat_schedule, MemLevel
 

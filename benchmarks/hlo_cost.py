@@ -32,9 +32,7 @@ depth exactly.
 from __future__ import annotations
 
 import gzip
-import math
 import re
-from functools import lru_cache
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
@@ -226,7 +224,6 @@ class HloCost:
                 continue
 
             if opcode == "dot":
-                lhs = re.search(r"\((%[\w.\-]+|[^,)]+)", rhs[rhs.index("dot("):])
                 contract = 1
                 cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
                 lhs_nm = re.findall(r"%[\w.\-]+", rhs.split("dot(", 1)[1])

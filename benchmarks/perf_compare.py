@@ -28,7 +28,6 @@ fig_dse.py) and emits BENCH_dse.json:
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
 import time

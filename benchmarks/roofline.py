@@ -23,7 +23,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Any
 
 from repro.configs.base import SHAPES
 from repro.configs.registry import get

@@ -146,13 +146,17 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+    failed = []
     for name, fn in SECTIONS.items():
         if only and name not in only:
             continue
         try:
             fn(args.full)
-        except Exception as e:  # keep the suite running
+        except Exception as e:  # keep the suite running, fail at the end
+            failed.append(name)
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+    if failed:
+        raise SystemExit(f"benchmark sections failed: {','.join(failed)}")
 
 
 if __name__ == "__main__":

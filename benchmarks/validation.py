@@ -11,7 +11,6 @@ from __future__ import annotations
 from repro.core import (
     ArraySpec,
     MemLevel,
-    Schedule,
     analyze,
     conv_nest,
     evaluate,
@@ -44,8 +43,8 @@ def table4_designs():
 
 
 def main():
+    mismatches = []
     for name, sched in table4_designs():
-        a = analyze(sched)
         # simulator handles temporal loops; fold spatial out for the check
         import dataclasses
 
@@ -66,10 +65,17 @@ def main():
         s = simulate(temporal)
         a2 = analyze(temporal)
         match = a2.reads == s.reads and a2.writes == s.writes
+        if not match:
+            mismatches.append(name)
         rep = evaluate(sched)
         print(
             f"validation,{name},model_vs_sim={'exact' if match else 'MISMATCH'},"
             f"energy={rep.energy_pj/1e3:.1f}nJ,util={rep.utilization:.2f}"
+        )
+    if mismatches:
+        raise RuntimeError(
+            f"analytical model diverged from the exact simulator on: "
+            f"{', '.join(mismatches)}"
         )
 
 

@@ -17,7 +17,6 @@ from repro.core import (
     analyze,
     choose_matmul_tiles,
     conv_nest,
-    evaluate,
     make_dataflow,
     search_blocking,
     simulate,

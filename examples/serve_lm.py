@@ -1,4 +1,5 @@
-"""Serving example: batched requests through the prefill+decode engine.
+"""Serving example: streaming requests through the continuous-batching
+engine (slot-based KV cache, prefill/decode interleaving).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -24,7 +25,12 @@ def main():
                 max_new_tokens=m)
         for n, m in ((5, 8), (12, 16), (3, 4))
     ]
-    outs = engine.generate(requests)
+
+    def on_token(rid, tok, idx, done):
+        tail = "  <done>" if done else ""
+        print(f"  stream req{rid}[{idx}] = {tok}{tail}")
+
+    outs = engine.run(requests, on_token=on_token)
     for i, out in enumerate(outs):
         print(f"request {i}: prompt_len={len(requests[i].prompt)} "
               f"generated={out.tolist()}")

@@ -18,7 +18,6 @@ length for padded decode caches), and return (B, Tq, KV, G, hd).
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -27,21 +26,32 @@ NEG_INF = -1e30
 
 
 def _bias_block(
-    q_pos: jax.Array,   # (bq,)
-    k_pos: jax.Array,   # (bk,)
+    q_pos: jax.Array,   # (bq,) or (B, bq) for per-slot decode caches
+    k_pos: jax.Array,   # (bk,) or (B, bk)
     causal: bool,
     window: int | None,
     kv_len: jax.Array | None,
 ) -> jax.Array:
-    diff = q_pos[:, None].astype(jnp.int32) - k_pos[None, :].astype(jnp.int32)
+    """Additive mask; broadcasting over a leading batch dim when either
+    position vector is per-batch (continuous-batching slot caches)."""
+    qp = q_pos.astype(jnp.int32)
+    kp = k_pos.astype(jnp.int32)
+    diff = qp[..., :, None] - kp[..., None, :]
     ok = jnp.ones(diff.shape, bool)
     if causal:
         ok &= diff >= 0
     if window is not None:
         ok &= diff < window
     if kv_len is not None:
-        ok &= k_pos[None, :] < kv_len
+        ok &= kp[..., None, :] < kv_len
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _add_bias(scores: jax.Array, bias: jax.Array) -> jax.Array:
+    """scores: (B, KV, G, Tq, Tk); bias: (Tq, Tk) or (B, Tq, Tk)."""
+    if bias.ndim == 2:
+        return scores + bias
+    return scores + bias[:, None, None]
 
 
 def dense_attention(
@@ -58,7 +68,7 @@ def dense_attention(
     B, Tq, KV, G, hd = q.shape
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
-    scores = scores + _bias_block(q_pos, k_pos, causal, window, kv_len)
+    scores = _add_bias(scores, _bias_block(q_pos, k_pos, causal, window, kv_len))
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
 
@@ -95,18 +105,27 @@ def blockwise_attention(
     pk = (-Tk) % bk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, (0, pq), constant_values=q_pos[-1])
+        pad_q = ((0, 0),) * (q_pos.ndim - 1) + ((0, pq),)
+        q_pos = jnp.pad(q_pos, pad_q, mode="edge")
     if pk:
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pk), constant_values=-(10**9))
+        pad_k = ((0, 0),) * (k_pos.ndim - 1) + ((0, pk),)
+        k_pos = jnp.pad(k_pos, pad_k, constant_values=-(10**9))
     nq, nk = q.shape[1] // bq, k.shape[1] // bk
 
     qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
     kb = k.reshape(B, nk, bk, KV, hd).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(B, nk, bk, KV, hd).transpose(1, 0, 2, 3, 4)
-    qpb = q_pos.reshape(nq, bq)
-    kpb = k_pos.reshape(nk, bk)
+    # position blocks: (nq, bq) shared, or (nq, B, bq) per-batch
+    if q_pos.ndim == 2:
+        qpb = q_pos.reshape(B, nq, bq).transpose(1, 0, 2)
+    else:
+        qpb = q_pos.reshape(nq, bq)
+    if k_pos.ndim == 2:
+        kpb = k_pos.reshape(B, nk, bk).transpose(1, 0, 2)
+    else:
+        kpb = k_pos.reshape(nk, bk)
 
     @jax.checkpoint
     def q_block(qi, qp, kbs, vbs, kps):
@@ -120,7 +139,7 @@ def blockwise_attention(
             m, l, acc = carry
             ki, vi, kp = kv_in
             s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki).astype(jnp.float32)
-            s = s * scale + _bias_block(qp, kp, causal, window, kv_len)
+            s = _add_bias(s * scale, _bias_block(qp, kp, causal, window, kv_len))
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)

@@ -8,7 +8,6 @@ build the dry-run without allocation.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
 
@@ -87,12 +86,43 @@ class prefill_aligned:
         _PREFILL_ALIGNED[0] = False
 
 
+# trace-time override for the dense projection GEMMs: the serve engine
+# routes decode-step matmuls through the Pallas kernel with mapper-chosen
+# tiles (kernels/matmul/ops.py) by tracing under `with matmul_override(f)`.
+# None = plain jnp dot (the training/default path, bit-identical to before).
+_MATMUL_IMPL: list = [None]
+
+
+class matmul_override:
+    def __init__(self, impl):
+        self.impl = impl
+
+    def __enter__(self):
+        self._prev = _MATMUL_IMPL[0]
+        _MATMUL_IMPL[0] = self.impl
+
+    def __exit__(self, *a):
+        _MATMUL_IMPL[0] = self._prev
+
+
+def _mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    impl = _MATMUL_IMPL[0]
+    if impl is None:
+        return x @ w
+    return impl(x, w)
+
+
 def init_kv_cache(
     cfg: ModelConfig, batch: int, max_len: int, window: int | None = None
 ) -> dict:
     """Per-layer KV cache.  Sliding-window layers get a ring buffer of the
     window size (a 500k-token context must not allocate 500k slots for a
-    1k-window layer)."""
+    1k-window layer).
+
+    ``pos``/``len`` are PER BATCH ROW so each row can sit at a different
+    sequence position — the slot-based continuous-batching engine
+    (serve/kvcache.py) relies on this to admit/evict requests one slot at a
+    time while decode stays one shape-stable compiled program."""
     kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     size = max_len if window is None else min(max_len, window)
     sd = dtype_of(cfg)
@@ -100,8 +130,8 @@ def init_kv_cache(
         "k": jnp.zeros((batch, size, kv, hd), sd),
         "v": jnp.zeros((batch, size, kv, hd), sd),
         # empty slots carry position +1e9 so the causal test masks them
-        "pos": jnp.full((size,), 10**9, jnp.int32),
-        "len": jnp.zeros((), jnp.int32),
+        "pos": jnp.full((batch, size), 10**9, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -128,17 +158,22 @@ def multihead_attention(
 
     from repro.parallel.policy import shard
 
-    q = shard(x @ params["wq"], "batch", "seq", "heads").reshape(B, Tq, h, hd)
-    k = shard(src @ params["wk"], "batch", "seq", "kv_heads").reshape(
+    q = shard(_mm(x, params["wq"]), "batch", "seq", "heads").reshape(
+        B, Tq, h, hd
+    )
+    k = shard(_mm(src, params["wk"]), "batch", "seq", "kv_heads").reshape(
         B, Tk, kv, hd
     )
-    v = shard(src @ params["wv"], "batch", "seq", "kv_heads").reshape(
+    v = shard(_mm(src, params["wv"]), "batch", "seq", "kv_heads").reshape(
         B, Tk, kv, hd
     )
 
     if positions is None:
-        base = cache["len"] if cache is not None else 0
-        positions = base + jnp.arange(Tq, dtype=jnp.int32)
+        if cache is not None:
+            # per-row base: rows of a slot cache sit at different positions
+            positions = cache["len"][:, None] + jnp.arange(Tq, dtype=jnp.int32)
+        else:
+            positions = jnp.arange(Tq, dtype=jnp.int32)
     k_pos = positions if kv_x is None else jnp.arange(Tk, dtype=jnp.int32)
     if use_rope:
         qc, qs = rope_angles(positions, hd, cfg.rope_theta)
@@ -150,14 +185,19 @@ def multihead_attention(
     kv_len = None
     if cache is not None:
         size = cache["k"].shape[1]
-        k_ins, v_ins, p_ins = k, v, positions
+        # per-row insert positions (rows may differ under slot batching)
+        p_ins = jnp.broadcast_to(
+            positions if positions.ndim == 2 else positions[None, :], (B, Tq)
+        )
+        k_ins, v_ins = k, v
         if Tk > size:  # ring smaller than the insert: keep the last `size`
-            k_ins, v_ins, p_ins = k[:, -size:], v[:, -size:], positions[-size:]
-        # ring invariant: slot(pos) = pos % size
+            k_ins, v_ins, p_ins = k[:, -size:], v[:, -size:], p_ins[:, -size:]
+        # ring invariant: slot(pos) = pos % size, independently per row
         slots = p_ins % size
-        ck = cache["k"].at[:, slots].set(k_ins)
-        cv = cache["v"].at[:, slots].set(v_ins)
-        cpos = cache["pos"].at[slots].set(p_ins)
+        row_set = jax.vmap(lambda buf, idx, val: buf.at[idx].set(val))
+        ck = row_set(cache["k"], slots, k_ins)
+        cv = row_set(cache["v"], slots, v_ins)
+        cpos = row_set(cache["pos"], slots, p_ins)
         new_cache = {
             "k": ck, "v": cv, "pos": cpos, "len": cache["len"] + Tq,
         }
@@ -175,7 +215,7 @@ def multihead_attention(
         qg, k, v, q_pos=positions, k_pos=k_pos, causal=causal,
         window=window, kv_len=kv_len, causal_skip=skip_ok,
     ).reshape(B, Tq, h * hd)
-    return ctx @ params["wo"], new_cache
+    return _mm(ctx, params["wo"]), new_cache
 
 
 # -------------------------------------------------------------------- MLPs --
@@ -196,12 +236,14 @@ def mlp_init(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
 def mlp(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     from repro.parallel.policy import shard
 
-    h = shard(x @ params["w_in"], "batch", "seq", "ff")
+    h = shard(_mm(x, params["w_in"]), "batch", "seq", "ff")
     if cfg.mlp_act == "swiglu":
-        h = jax.nn.silu(shard(x @ params["w_gate"], "batch", "seq", "ff")) * h
+        h = jax.nn.silu(
+            shard(_mm(x, params["w_gate"]), "batch", "seq", "ff")
+        ) * h
     else:
         h = jax.nn.gelu(h)
-    return shard(h @ params["w_out"], "batch", "seq", "embed")
+    return shard(_mm(h, params["w_out"]), "batch", "seq", "embed")
 
 
 # -------------------------------------------------------------- embeddings --
@@ -229,9 +271,9 @@ def unembed(params: dict, x: jax.Array) -> jax.Array:
     from repro.parallel.policy import shard
 
     if "unembed" in params:
-        out = x @ params["unembed"]
+        out = _mm(x, params["unembed"])
     else:
-        out = x @ params["tok"].T
+        out = _mm(x, params["tok"].T)
     names = ("batch", "seq", "vocab")[-out.ndim:]
     return shard(out, *names)
 

@@ -24,8 +24,7 @@ per family:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -206,8 +205,6 @@ class Model:
                 y, nc, aux = rwkv_block_apply(p, cfg, x, cache=c)
                 return y, (nc, aux)
         else:
-            windows = layer_windows(cfg)
-
             def body(x, p_c_w):
                 p, c, w = p_c_w
                 y, nc, aux = attn_block_apply(
@@ -275,7 +272,6 @@ class Model:
 
     def _backbone_hybrid(self, params, x, positions, caches, remat):
         cfg = self.cfg
-        npr = cfg.rnn_per_attention
 
         def group_body(x, p_c):
             p, c = p_c
@@ -344,94 +340,18 @@ class Model:
 
     # -------------------------------------------------------------- serve --
     def init_caches(self, batch: int, max_len: int) -> Any:
-        cfg = self.cfg
-        if cfg.family == "hybrid":
-            ng, rem = divmod(cfg.n_layers, cfg.rnn_per_attention + 1)
-            stack = lambda n, f: jax.tree.map(
-                lambda *xs: jnp.stack(xs), *([f()] * n)
-            )
-            groups = None
-            if ng:
-                groups = {
-                    "rnn": stack(
-                        ng,
-                        lambda: stack(
-                            cfg.rnn_per_attention,
-                            lambda: G.rglru_init_cache(cfg, batch),
-                        ),
-                    ),
-                    "attn": stack(
-                        ng,
-                        lambda: L.init_kv_cache(
-                            cfg, batch, max_len, cfg.sliding_window
-                        ),
-                    ),
-                }
-            return {
-                "groups": groups,
-                "tail": stack(rem, lambda: G.rglru_init_cache(cfg, batch))
-                if rem
-                else None,
-            }
-        if cfg.mixer == "rwkv6":
-            return jax.tree.map(
-                lambda *xs: jnp.stack(xs),
-                *[R.rwkv_init_cache(cfg, batch)] * cfg.n_layers,
-            )
-        if cfg.global_every:
-            ge = cfg.global_every
-            ng = cfg.n_layers // ge
-            n_tail = cfg.n_layers - ng * ge
-            stack = lambda n, f: jax.tree.map(
-                lambda *xs: jnp.stack(xs), *([f()] * n)
-            )
-            local = lambda: L.init_kv_cache(
-                cfg, batch, max_len, cfg.sliding_window
-            )
-            return {
-                "groups": {
-                    "local": stack(ng, lambda: stack(ge - 1, local)),
-                    "global": stack(
-                        ng, lambda: L.init_kv_cache(cfg, batch, max_len)
-                    ),
-                },
-                "tail": stack(n_tail, local) if n_tail else None,
-            }
-        wins = layer_windows(cfg)
-        per = [
-            L.init_kv_cache(
-                cfg, batch, max_len,
-                None if int(w) >= 2**30 else int(w),
-            )
-            for w in wins
-        ]
-        # stack layerwise: same cache sizes stack cleanly when homogeneous;
-        # gemma-style mixed sizes are padded to the largest (ring semantics
-        # keep the window correct).
-        sizes = {p["k"].shape[1] for p in per}
-        size = max(sizes)
-        def padded(p):
-            s = p["k"].shape[1]
-            if s == size:
-                return p
-            padk = jnp.zeros(
-                (batch, size - s) + p["k"].shape[2:], p["k"].dtype
-            )
-            return {
-                "k": jnp.concatenate([p["k"], padk], 1),
-                "v": jnp.concatenate([p["v"], padk], 1),
-                "pos": jnp.concatenate(
-                    [p["pos"], jnp.full((size - s,), 10**9, jnp.int32)]
-                ),
-                "len": p["len"],
-            }
-        per = [padded(p) for p in per]
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        # construction lives with the slot-cache machinery in serve/kvcache
+        from repro.serve.kvcache import build_caches
+
+        return build_caches(self.cfg, batch, max_len)
 
     def prefill(
         self, params: dict, tokens: jax.Array, caches: Any,
         patches: jax.Array | None = None,
+        last_index: jax.Array | None = None,
     ):
+        """last_index: per-row index of the last real token, for prompts
+        right-padded to a bucket length (default: the final position)."""
         cfg = self.cfg
         x = L.embed(params["embed"], tokens)
         if cfg.family == "vlm" and patches is not None:
@@ -442,7 +362,12 @@ class Model:
             logits, caches, _ = self.logits_fn(
                 params, x, positions=positions, caches=caches
             )
-        return logits[:, -1], caches
+        if last_index is None:
+            return logits[:, -1], caches
+        sel = jnp.take_along_axis(
+            logits, last_index.astype(jnp.int32)[:, None, None], axis=1
+        )[:, 0]
+        return sel, caches
 
     def decode_step(self, params: dict, tokens: jax.Array, caches: Any):
         """tokens: (B, 1) -> (logits (B, V), new caches)."""

@@ -216,7 +216,7 @@ class BatchedCostModel:
         if padded > self._max_padded_macs:
             raise BatchOverflowError(
                 f"counts for nest {self.nest.name} may overflow the batched "
-                f"engine; use the scalar oracle"
+                "engine; use the scalar oracle"
             )
 
     def pack(
@@ -280,7 +280,7 @@ class BatchedCostModel:
         if padded_f.max(initial=0.0) > self._max_padded_macs:
             raise BatchOverflowError(
                 f"tilings for nest {self.nest.name} exceed the batched "
-                f"engine's exact integer range; use the scalar oracle"
+                "engine's exact integer range; use the scalar oracle"
             )
 
         cum = np.cumprod(til, axis=1)          # (n, L, D) tiles through level l

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Mapping, Sequence
+from typing import Mapping
 
 # Canonical dim names for the 7-loop CONV nest (paper Algorithm 1).
 CONV_DIMS = ("B", "K", "C", "Y", "X", "FY", "FX")

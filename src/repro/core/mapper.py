@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 import os
 
 from repro.core import energy as en

@@ -16,7 +16,6 @@ Baselines (paper Fig 14): an Eyeriss-like mobile chip (16x16 PEs, 512 B RF,
 from __future__ import annotations
 
 import dataclasses
-import math
 import multiprocessing
 from concurrent.futures import ProcessPoolExecutor
 from typing import Sequence

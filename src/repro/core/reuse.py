@@ -53,7 +53,6 @@ Validated exactly against the tile-granular simulator in simulate.py
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Mapping
 
 from repro.core.loopnest import TensorRef

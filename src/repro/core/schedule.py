@@ -25,7 +25,7 @@ import dataclasses
 import math
 from typing import Mapping, Sequence
 
-from repro.core.loopnest import LoopNest, TensorRef
+from repro.core.loopnest import LoopNest
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,7 +12,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.blocking import search_blocking
 from repro.core.dataflow import Dataflow

@@ -19,7 +19,6 @@ contiguous in lanes, which both layouts provide ((T, bd) and (Dk, Dv)).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -32,10 +32,8 @@ import json
 import re
 import time
 import traceback
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES

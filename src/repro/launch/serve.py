@@ -1,48 +1,90 @@
-"""Production serving launcher (local-mesh variant of the decode dry-run).
+"""Production serving launcher on the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-smoke
+
+Generates a mixed-length synthetic workload, streams tokens through the
+slot-based engine, and reports throughput plus per-token latency.  Pass
+``--static`` to run the padded static-batch baseline instead (same workload,
+same slot count) for an A/B on the spot.
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.arch.model_zoo import build
 from repro.configs.registry import get
-from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.engine import Engine, Request, ServeConfig, StaticEngine
+
+
+def make_workload(cfg, n: int, max_new: int, seed: int = 0) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rng.integers(0, cfg.vocab, rng.integers(3, 16)).astype(np.int32),
+            max_new_tokens=int(rng.integers(max(2, max_new // 4), max_new + 1)),
+            request_id=i,
+        )
+        for i in range(n)
+    ]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m-smoke")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--matmul", choices=("xla", "pallas"), default="xla")
+    ap.add_argument("--static", action="store_true",
+                    help="run the padded static-batch baseline instead")
     args = ap.parse_args()
 
     cfg = get(args.arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(cfg, params,
-                    ServeConfig(batch=args.batch, max_len=args.max_len))
-    rng = np.random.default_rng(0)
-    reqs = [
-        Request(rng.integers(0, cfg.vocab, rng.integers(3, 16)).astype(np.int32),
-                max_new_tokens=args.new_tokens)
-        for _ in range(args.requests)
-    ]
-    import time
+    scfg = ServeConfig(
+        batch=args.slots, max_len=args.max_len,
+        temperature=args.temperature, seed=args.seed,
+        prefill_bucket=args.prefill_bucket, matmul=args.matmul,
+    )
+    reqs = make_workload(cfg, args.requests, args.new_tokens, args.seed)
 
     t0 = time.perf_counter()
-    outs = engine.generate(reqs)
+    stamps: dict[int, list[float]] = {}
+
+    def on_token(rid, tok, idx, done):
+        stamps.setdefault(rid, []).append(time.perf_counter() - t0)
+
+    if args.static:
+        outs = StaticEngine(cfg, params, scfg).generate(reqs, on_token=on_token)
+    else:
+        outs = Engine(cfg, params, scfg).run(reqs, on_token=on_token)
     dt = time.perf_counter() - t0
+
     total_new = sum(len(o) for o in outs)
-    print(f"served {len(reqs)} requests, {total_new} tokens, "
-          f"{dt:.2f}s ({total_new/dt:.1f} tok/s)")
+    deltas = [
+        b - a
+        for ts in stamps.values()
+        for a, b in zip([0.0] + ts[:-1], ts)
+    ]
+    deltas.sort()
+    p50 = deltas[len(deltas) // 2] if deltas else 0.0
+    p95 = deltas[min(len(deltas) - 1, int(len(deltas) * 0.95))] if deltas else 0.0
+    mode = "static" if args.static else "continuous"
+    print(
+        f"[{mode}] served {len(reqs)} requests, {total_new} tokens, "
+        f"{dt:.2f}s ({total_new / dt:.1f} tok/s, "
+        f"per-token p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms)"
+    )
     for i, o in enumerate(outs):
         print(f"  req{i}: {o.tolist()}")
 

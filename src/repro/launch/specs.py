@@ -7,7 +7,6 @@ precomputed frame embeddings and llava gets patch embeddings.
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax
@@ -65,8 +64,16 @@ def opt_shapes(params: Any) -> Any:
 
 
 def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Any:
-    model = build(cfg)
-    return jax.eval_shape(lambda: model.init_caches(batch, max_len))
+    """Decode/prefill cache shapes.  Decoder-only families build straight
+    from the serve engine's slot-cache module so the dry-run lowers exactly
+    what the continuous-batching engine allocates; encdec keeps its model
+    hook (cross-attention carries encoder state alongside)."""
+    if cfg.family == "encdec":
+        model = build(cfg)
+        return jax.eval_shape(lambda: model.init_caches(batch, max_len))
+    from repro.serve.kvcache import build_caches
+
+    return jax.eval_shape(lambda: build_caches(cfg, batch, max_len))
 
 
 def input_specs(

@@ -13,7 +13,6 @@ HLO (visible to the roofline's collective-bytes parser).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

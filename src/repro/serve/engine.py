@@ -1,41 +1,303 @@
-"""Serving engine: batched prefill + decode over the model zoo.
+"""Continuous-batching serve engine: slot-based KV cache + async admission.
 
-A minimal production shape: a request queue is packed into fixed-size
-batches, prefilled once, then decoded step-by-step with greedy or
-temperature sampling.  KV caches are preallocated to max_len (ring buffers
-for sliding-window layers), so decode steps are shape-stable = one compiled
-XLA program regardless of position, which is what the decode_32k/long_500k
-dry-run cells lower.
+The paper's §6.3 lesson — allocate resources to match the delivered
+throughput, don't leave them idle — recurs at request granularity in
+serving.  The old engine padded every request in a static batch to the
+slowest prompt and the largest ``max_new_tokens``; here the decode batch is
+a fixed ring of ``batch`` KV *slots* (one compiled decode program,
+shape-stable forever) and requests flow through it continuously:
+
+  * **admission**: a waiting request is prefilled into a batch-1 cache and
+    scattered into a free slot (`serve/kvcache.slot_store`), interleaved
+    with decode steps;
+  * **decode**: every step advances *all* occupied slots by one token;
+  * **eviction + backfill**: a slot frees the moment its request finishes
+    and is re-admitted from the queue on the next step — no drain barrier.
+
+Sampling keys are derived per request as ``fold_in(fold_in(seed, rid), t)``
+so outputs are bitwise-deterministic for a fixed seed regardless of arrival
+order or slot assignment (slot rows are computationally independent).
+
+Decode GEMMs can be routed through the Pallas matmul with tile sizes from
+the paper's blocking search (``core.mapper.choose_matmul_tiles``) exactly
+like ``kernels/matmul/ops.py`` — enable with ``ServeConfig(matmul="pallas")``.
+
+The pre-continuous static-batch loop survives as :class:`StaticEngine`, the
+baseline that ``benchmarks/serve_bench.py`` measures against.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from collections import deque
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.arch import layers as L
 from repro.arch.model_zoo import build
 from repro.configs.base import ModelConfig
+from repro.serve import kvcache
+
+# on_token(request_id, token, index, done)
+TokenCallback = Callable[[int, int, int, bool], None]
 
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 16
+    # stable id for deterministic sampling; defaults to submission order
+    request_id: int | None = None
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    batch: int = 4
+    batch: int = 4               # number of KV slots (decode batch width)
     max_len: int = 256
     temperature: float = 0.0
     seed: int = 0
+    # >0: right-pad prompts to a multiple of this so prefill compiles once
+    # per bucket, not once per length (global-attention models only; other
+    # families silently fall back to exact-length prefill)
+    prefill_bucket: int = 0
+    # "xla" | "pallas": route projection GEMMs through the Pallas kernel
+    # with mapper-chosen tiles (core.mapper.choose_matmul_tiles)
+    matmul: str = "xla"
+
+
+@dataclasses.dataclass
+class _SlotState:
+    rid: int
+    emitted: int                 # tokens generated so far
+    budget: int                  # effective max_new_tokens
+
+
+def _pallas_mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(..., K) @ (K, N) through the schedule-driven Pallas matmul."""
+    from repro.kernels.matmul.ops import matmul
+
+    out = matmul(x.reshape(-1, x.shape[-1]), w)
+    return out.reshape(x.shape[:-1] + (w.shape[-1],))
 
 
 class Engine:
+    """Continuous-batching engine over the model zoo's prefill/decode."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        if cfg.family == "encdec":
+            raise ValueError(
+                "continuous batching serves decoder-only LMs; whisper-style "
+                "encdec requests need per-request encoder state"
+            )
+        self.cfg = cfg
+        self.model = build(cfg)
+        self.params = params
+        self.scfg = scfg
+        self._impl = _pallas_mm if scfg.matmul == "pallas" else None
+
+        self.caches = kvcache.build_caches(cfg, scfg.batch, scfg.max_len)
+        self._axes = kvcache.slot_axes(cfg, scfg.max_len)
+        self._free: deque[int] = deque(range(scfg.batch))
+        self._waiting: deque[tuple[int, np.ndarray, int]] = deque()
+        self._slots: dict[int, _SlotState] = {}
+        self._outputs: dict[int, list[int]] = {}
+        self._next_rid = 0
+        self._cur_tok = np.zeros((scfg.batch,), np.int32)
+
+        model, impl, axes = self.model, self._impl, self._axes
+        max_len = scfg.max_len
+        key0 = jax.random.PRNGKey(scfg.seed)
+        temp = scfg.temperature
+
+        def sample_one(logits: jax.Array, key: jax.Array) -> jax.Array:
+            if temp <= 0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(key, logits / temp).astype(jnp.int32)
+
+        def req_key(rid: jax.Array, t: jax.Array) -> jax.Array:
+            return jax.random.fold_in(jax.random.fold_in(key0, rid), t)
+
+        def decode_fn(params, toks, caches, rids, ts):
+            with L.matmul_override(impl):
+                logits, caches = model.decode_step(params, toks, caches)
+            nxt = jax.vmap(lambda lg, r, t: sample_one(lg, req_key(r, t)))(
+                logits, rids, ts
+            )
+            return nxt, caches
+
+        def admit_fn(params, toks, big, slots_, rids, true_lens):
+            """Fused admission: prefill `n` prompts (right-padded rows mask
+            their tail; exact rows mask nothing), scatter each into its
+            slot, and sample each request's first token — one dispatch."""
+            n = toks.shape[0]
+            small = kvcache.build_caches(cfg, n, max_len)
+            with L.matmul_override(impl):
+                logits, small = model.prefill(
+                    params, toks, small, last_index=true_lens - 1
+                )
+            small = kvcache.mask_prompt_tail(small, true_lens)
+            for i in range(n):
+                big = kvcache.slot_store(
+                    big, kvcache.take_slot(small, i, axes), slots_[i], axes
+                )
+            toks0 = jax.vmap(
+                lambda lg, r: sample_one(lg, req_key(r, jnp.int32(0)))
+            )(logits, rids)
+            return toks0, big
+
+        self._decode = jax.jit(decode_fn)
+        self._admit_group = jax.jit(admit_fn)
+
+    # ---------------------------------------------------------- admission --
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its id.  Prompts longer than
+        ``max_len - 1`` keep their most recent tokens; ``max_new_tokens`` is
+        truncated so the request never outgrows its slot."""
+        rid = req.request_id if req.request_id is not None else self._next_rid
+        if rid in self._outputs:
+            raise ValueError(f"duplicate request_id {rid}")
+        self._next_rid = max(self._next_rid, rid + 1)
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        max_len = self.scfg.max_len
+        if len(prompt) >= max_len:
+            prompt = prompt[-(max_len - 1) :]
+        budget = min(int(req.max_new_tokens), max_len - len(prompt))
+        self._outputs[rid] = []
+        if budget > 0 and len(prompt) > 0:
+            self._waiting.append((rid, prompt, budget))
+        return rid
+
+    def _admit_waiting(self, on_token: TokenCallback | None) -> None:
+        """Backfill every free slot from the queue.  Admissions sharing a
+        prefill length run as ONE fused jitted call (prefill + tail mask +
+        slot scatter + first-token sample); right-padding to
+        ``prefill_bucket`` collapses mixed prompt lengths onto one compiled
+        shape where that is exact (`kvcache.supports_padded_prefill`)."""
+        scfg = self.scfg
+        bucket = (
+            scfg.prefill_bucket
+            if kvcache.supports_padded_prefill(self.cfg)
+            else 0
+        )
+        groups: dict[int, list[tuple[int, np.ndarray, int, int]]] = {}
+        order: list[int] = []
+        while self._free and self._waiting:
+            rid, prompt, budget = self._waiting.popleft()
+            slot = self._free.popleft()
+            plen = len(prompt)
+            lpad = -(-plen // bucket) * bucket if bucket > 0 else plen
+            if lpad > scfg.max_len:
+                lpad = plen  # bucket would overflow the cache: exact length
+            if lpad not in groups:
+                groups[lpad] = []
+                order.append(lpad)
+            groups[lpad].append((rid, prompt, budget, slot))
+
+        for lpad in order:
+            items = groups[lpad]
+            n = len(items)
+            toks = np.zeros((n, lpad), np.int32)
+            slots_ = np.empty((n,), np.int32)
+            rids = np.empty((n,), np.int32)
+            tlens = np.empty((n,), np.int32)
+            for j, (rid, prompt, budget, slot) in enumerate(items):
+                toks[j, : len(prompt)] = prompt
+                slots_[j], rids[j], tlens[j] = slot, rid, len(prompt)
+            toks0, self.caches = self._admit_group(
+                self.params,
+                jnp.asarray(toks),
+                self.caches,
+                jnp.asarray(slots_),
+                jnp.asarray(rids),
+                jnp.asarray(tlens),
+            )
+            toks0 = np.asarray(toks0)
+            for j, (rid, prompt, budget, slot) in enumerate(items):
+                tok = int(toks0[j])
+                self._outputs[rid].append(tok)
+                self._cur_tok[slot] = tok
+                done = budget == 1
+                if on_token is not None:
+                    on_token(rid, tok, 0, done)
+                if done:
+                    self._free.append(slot)
+                else:
+                    self._slots[slot] = _SlotState(rid=rid, emitted=1, budget=budget)
+
+    # -------------------------------------------------------------- drive --
+    def step(self, on_token: TokenCallback | None = None) -> bool:
+        """One engine iteration: backfill free slots from the queue, then
+        advance every occupied slot by one decode token.  Returns False
+        once the engine is idle."""
+        while self._free and self._waiting:
+            self._admit_waiting(on_token)
+        if not self._slots:
+            return bool(self._waiting)
+
+        B = self.scfg.batch
+        rids = np.zeros((B,), np.int32)
+        ts = np.zeros((B,), np.int32)
+        for s, st in self._slots.items():
+            rids[s], ts[s] = st.rid, st.emitted
+        nxt, self.caches = self._decode(
+            self.params,
+            jnp.asarray(self._cur_tok[:, None]),
+            self.caches,
+            jnp.asarray(rids),
+            jnp.asarray(ts),
+        )
+        nxt = np.asarray(nxt)
+        self._cur_tok = nxt.copy()
+
+        finished = []
+        for s in sorted(self._slots):
+            st = self._slots[s]
+            tok = int(nxt[s])
+            self._outputs[st.rid].append(tok)
+            st.emitted += 1
+            done = st.emitted >= st.budget
+            if on_token is not None:
+                on_token(st.rid, tok, st.emitted - 1, done)
+            if done:
+                finished.append(s)
+        for s in finished:
+            del self._slots[s]
+            self._free.append(s)  # backfilled at the next step
+        return True
+
+    def pop_result(self, rid: int) -> np.ndarray:
+        """Take (and free) a request's accumulated tokens.  Long-running
+        step()-driven servers must call this after a request's ``done``
+        callback, or completed outputs accumulate without bound."""
+        return np.asarray(self._outputs.pop(rid), np.int32)
+
+    def run(
+        self,
+        requests: list[Request] = (),
+        on_token: TokenCallback | None = None,
+    ) -> list[np.ndarray]:
+        """Submit ``requests``, drive the engine dry, and return each
+        request's generated tokens (in submission order).  Returned results
+        are evicted from the engine (their ids become reusable)."""
+        rids = [self.submit(r) for r in requests]
+        while self.step(on_token):
+            pass
+        return [self.pop_result(r) for r in rids]
+
+    # legacy API (PR-2-era callers): identical signature, continuous core
+    def generate(self, requests: list[Request]) -> list[np.ndarray]:
+        return self.run(requests)
+
+
+class StaticEngine:
+    """The pre-continuous static-batch engine, kept as the measured
+    baseline: requests are packed into fixed batches, left-padded to the
+    longest prompt, and decoded in lockstep to the largest
+    ``max_new_tokens`` in the batch."""
+
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
         self.cfg = cfg
         self.model = build(cfg)
@@ -51,29 +313,57 @@ class Engine:
             key, logits / self.scfg.temperature, axis=-1
         ).astype(jnp.int32)
 
-    def generate(self, requests: list[Request]) -> list[np.ndarray]:
-        """Pack requests (padded to batch), prefill, decode greedily."""
+    def _generate_batch(
+        self,
+        requests: list[Request],
+        rids: list[int],
+        on_token: TokenCallback | None,
+    ) -> list[np.ndarray]:
         scfg = self.scfg
-        assert len(requests) <= scfg.batch
-        pad_n = scfg.batch - len(requests)
         plen = max(len(r.prompt) for r in requests)
         prompts = np.zeros((scfg.batch, plen), np.int32)
         for i, r in enumerate(requests):
-            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            prompts[i, plen - len(r.prompt) :] = r.prompt  # left-pad
         max_new = max(r.max_new_tokens for r in requests)
 
         caches = self.model.init_caches(scfg.batch, scfg.max_len)
-        logits, caches = self._prefill(
-            self.params, jnp.asarray(prompts), caches
-        )
+        logits, caches = self._prefill(self.params, jnp.asarray(prompts), caches)
         key = jax.random.PRNGKey(scfg.seed)
         outs = []
         tok = self._sample(logits, key)
         outs.append(np.asarray(tok))
-        for i in range(max_new - 1):
+        self._emit(requests, rids, outs, on_token)
+        for _ in range(max_new - 1):
             key, sub = jax.random.split(key)
             logits, caches = self._decode(self.params, tok[:, None], caches)
             tok = self._sample(logits, sub)
             outs.append(np.asarray(tok))
+            self._emit(requests, rids, outs, on_token)
         gen = np.stack(outs, axis=1)  # (B, max_new)
         return [gen[i, : r.max_new_tokens] for i, r in enumerate(requests)]
+
+    @staticmethod
+    def _emit(requests, rids, outs, on_token):
+        if on_token is None:
+            return
+        t = len(outs) - 1
+        for i, r in enumerate(requests):
+            if t < r.max_new_tokens:
+                on_token(rids[i], int(outs[-1][i]), t, t == r.max_new_tokens - 1)
+
+    def generate(
+        self,
+        requests: list[Request],
+        on_token: TokenCallback | None = None,
+    ) -> list[np.ndarray]:
+        """Serve in fixed batches of ``scfg.batch`` requests."""
+        results: list[np.ndarray] = []
+        B = self.scfg.batch
+        for lo in range(0, len(requests), B):
+            chunk = requests[lo : lo + B]
+            rids = [
+                r.request_id if r.request_id is not None else lo + i
+                for i, r in enumerate(chunk)
+            ]
+            results.extend(self._generate_batch(chunk, rids, on_token))
+        return results

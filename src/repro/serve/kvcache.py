@@ -1,0 +1,194 @@
+"""Slot-based batched KV cache for the continuous-batching serve engine.
+
+The decode-path cache construction that used to live inline in
+``arch/transformer.py`` is carved out here as :func:`build_caches`, plus the
+slot-pool primitives the engine needs:
+
+  * ``build_caches(cfg, batch, max_len)`` — the full decoder-side cache
+    pytree for every model family (uniform attention stacks, gemma-style
+    local:global ring groups, rwkv/rglru recurrent states, hybrid groups).
+    Every leaf carries the batch ("slot") axis, including per-row ``pos`` /
+    ``len`` counters, so different rows can sit at different sequence
+    positions.
+  * ``slot_store(big, small, slot)`` — scatter a freshly prefilled
+    batch-1 cache into slot ``slot`` of the persistent batched cache.  One
+    compiled program handles admission for every slot index.
+  * ``mask_prompt_tail(caches, true_len)`` — invalidate the garbage entries
+    a right-padded (bucketed) prefill wrote past the real prompt length.
+  * ``supports_padded_prefill(cfg)`` — whether bucketed prefill is exact
+    for this config (global attention only: ring buffers and recurrent /
+    capacity-routed states are polluted by pad tokens).
+
+Slot semantics: admission fully overwrites a slot (the prefilled batch-1
+cache starts from zeros, so stale K/V, ``pos`` sentinels and recurrent
+states are all replaced); eviction is free — a dead slot keeps decoding
+garbage that nothing reads, and the next admission overwrites it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.arch import layers as L
+from repro.arch import rglru as G
+from repro.arch import rwkv as R
+from repro.configs.base import ModelConfig
+
+
+def _stack(n: int, f) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *([f()] * n))
+
+
+def build_caches(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    """Decode caches for ``batch`` slots of ``max_len`` positions each."""
+    if cfg.family == "hybrid":
+        ng, rem = divmod(cfg.n_layers, cfg.rnn_per_attention + 1)
+        groups = None
+        if ng:
+            groups = {
+                "rnn": _stack(
+                    ng,
+                    lambda: _stack(
+                        cfg.rnn_per_attention,
+                        lambda: G.rglru_init_cache(cfg, batch),
+                    ),
+                ),
+                "attn": _stack(
+                    ng,
+                    lambda: L.init_kv_cache(cfg, batch, max_len, cfg.sliding_window),
+                ),
+            }
+        return {
+            "groups": groups,
+            "tail": _stack(rem, lambda: G.rglru_init_cache(cfg, batch))
+            if rem
+            else None,
+        }
+    if cfg.mixer == "rwkv6":
+        return _stack(cfg.n_layers, lambda: R.rwkv_init_cache(cfg, batch))
+    if cfg.global_every:
+        ge = cfg.global_every
+        ng = cfg.n_layers // ge
+        n_tail = cfg.n_layers - ng * ge
+
+        def local():
+            return L.init_kv_cache(cfg, batch, max_len, cfg.sliding_window)
+
+        return {
+            "groups": {
+                "local": _stack(ng, lambda: _stack(ge - 1, local)),
+                "global": _stack(ng, lambda: L.init_kv_cache(cfg, batch, max_len)),
+            },
+            "tail": _stack(n_tail, local) if n_tail else None,
+        }
+    from repro.arch.transformer import layer_windows
+
+    wins = layer_windows(cfg)
+    per = [
+        L.init_kv_cache(cfg, batch, max_len, None if int(w) >= 2**30 else int(w))
+        for w in wins
+    ]
+    # stack layerwise: same cache sizes stack cleanly when homogeneous;
+    # gemma-style mixed sizes are padded to the largest (ring semantics
+    # keep the window correct).
+    size = max(p["k"].shape[1] for p in per)
+
+    def padded(p):
+        s = p["k"].shape[1]
+        if s == size:
+            return p
+        padk = jnp.zeros((batch, size - s) + p["k"].shape[2:], p["k"].dtype)
+        return {
+            "k": jnp.concatenate([p["k"], padk], 1),
+            "v": jnp.concatenate([p["v"], padk], 1),
+            "pos": jnp.concatenate(
+                [p["pos"], jnp.full((batch, size - s), 10**9, jnp.int32)], 1
+            ),
+            "len": p["len"],
+        }
+
+    per = [padded(p) for p in per]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def slot_axes(cfg: ModelConfig, max_len: int) -> Any:
+    """Per-leaf index of the slot (batch) axis, located by building the
+    cache pytree at two batch sizes and diffing shapes — robust to however
+    many layer/group axes a family stacks in front (hybrid rnn leaves are
+    ``(ng, rnn_per, B, ...)``, attention leaves ``(L, B, size, ...)``, …)."""
+    s1 = jax.eval_shape(lambda: build_caches(cfg, 1, max_len))
+    s2 = jax.eval_shape(lambda: build_caches(cfg, 2, max_len))
+
+    def diff(a, b):
+        return next(i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y)
+
+    return jax.tree.map(diff, s1, s2)
+
+
+def slot_store(big: Any, small: Any, slot: jax.Array, axes: Any) -> Any:
+    """Write row 0 of a batch-1 cache pytree into slot ``slot`` of a
+    batched one.  ``slot`` may be traced, so one jit of this function
+    serves every admission; ``axes`` is the static tree from
+    :func:`slot_axes`."""
+
+    def put(b, s, ax):
+        starts = [jnp.int32(0)] * b.ndim
+        starts[ax] = jnp.asarray(slot, jnp.int32)
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), starts)
+
+    return jax.tree.map(put, big, small, axes)
+
+
+def take_slot(caches: Any, row: int, axes: Any) -> Any:
+    """Slice one slot out of a batched cache pytree, keeping the slot axis
+    at extent 1 (the shape :func:`slot_store` expects back)."""
+    return jax.tree.map(
+        lambda leaf, ax: jax.lax.dynamic_slice_in_dim(leaf, row, 1, axis=ax),
+        caches,
+        axes,
+    )
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def mask_prompt_tail(caches: Any, true_len: jax.Array) -> Any:
+    """Invalidate cache entries a right-padded prefill wrote past the real
+    prompt: ``pos`` returns to the +1e9 "empty" sentinel (the causal test
+    masks those keys) and ``len`` rewinds to the true length.  Only valid
+    for non-ring caches, where slot index == position.  ``true_len`` may be
+    scalar or per-row ``(B,)`` (rows of a batched admission have different
+    prompt lengths)."""
+    tl = jnp.asarray(true_len, jnp.int32)
+
+    def fix(path, leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            idx = jnp.arange(leaf.shape[-1], dtype=jnp.int32)
+            return jnp.where(idx >= tl[..., None], jnp.int32(10**9), leaf)
+        if name == "len":
+            return jnp.broadcast_to(tl, leaf.shape).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+def supports_padded_prefill(cfg: ModelConfig) -> bool:
+    """Bucketed (right-padded) prefill is exact only when every layer is
+    global attention: pad tokens never enter a key window (they are causally
+    ahead and later masked by :func:`mask_prompt_tail`).  Ring buffers could
+    be overwritten by pad slots, recurrent states integrate pad tokens, and
+    MoE capacity routing lets pad tokens change real tokens' drop pattern."""
+    return (
+        cfg.family == "dense"
+        and cfg.mixer == "attention"
+        and cfg.sliding_window is None
+        and cfg.moe is None
+    )

@@ -1,13 +1,11 @@
 """Unit tests: schedule validation, dataflow taxonomy, blocking search,
 energy tables, optimizer pruning."""
 
-import math
 
 import pytest
 
 from repro.core import (
     ArraySpec,
-    CostTable,
     MemLevel,
     Schedule,
     conv_nest,
@@ -74,7 +72,6 @@ def test_spatial_capacity_enforced():
 def test_footprint_halo():
     """Input tiles carry the sliding-window halo: (x + fx - 1)."""
     nest = conv_nest("t", B=1, K=1, C=1, X=8, Y=8, FX=3, FY=3)
-    s = flat_schedule(nest, LEVELS)
     tile = {"B": 1, "K": 1, "C": 1, "X": 4, "Y": 4, "FX": 3, "FY": 3}
     assert nest.tensor("I").tile_elems(tile) == 6 * 6
     assert nest.tensor("W").tile_elems(tile) == 9

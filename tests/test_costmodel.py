@@ -10,7 +10,6 @@ without the hypothesis package).
 import math
 import random
 
-import numpy as np
 import pytest
 
 from repro.core.blocking import _level_energy, search_blocking
@@ -18,7 +17,6 @@ from repro.core.costmodel import BatchedCostModel, BatchOverflowError
 from repro.core.dataflow import Dataflow, make_dataflow
 from repro.core.energy import CostTable, evaluate
 from repro.core.loopnest import conv_nest, fc_nest, matmul_nest
-from repro.core.reuse import analyze
 from repro.core.schedule import ArraySpec, MemLevel, Schedule
 
 

@@ -1,6 +1,5 @@
 """Halide front-end lowering + hlo_cost parser + roofline model tests."""
 
-import gzip
 import os
 
 import pytest

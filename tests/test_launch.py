@@ -10,7 +10,7 @@ import jax
 import pytest
 
 from repro.configs.base import SHAPES
-from repro.configs.registry import ARCHS, get
+from repro.configs.registry import get
 from repro.launch.dryrun import collective_bytes, scan_unit, variant_cfg
 from repro.launch.specs import (
     cell_is_live,

@@ -5,7 +5,6 @@ here the agreement is exact by construction of the stationarity semantics,
 checked on hand-built schedules and hypothesis-randomized ones.
 """
 
-import math
 
 import pytest
 

@@ -1,0 +1,252 @@
+"""Continuous-batching serve engine: slot admission/eviction/backfill,
+truncation, determinism, and the slot-cache primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arch.model_zoo import build
+from repro.configs.registry import get
+from repro.serve import kvcache
+from repro.serve.engine import Engine, Request, ServeConfig, StaticEngine
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get("smollm-360m-smoke")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(cfg, spec, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rng.integers(0, cfg.vocab, n).astype(np.int32),
+            max_new_tokens=m,
+            request_id=i,
+        )
+        for i, (n, m) in enumerate(spec)
+    ]
+
+
+def test_empty_request_list(smol):
+    cfg, params = smol
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_len=32))
+    assert eng.run([]) == []
+
+
+def test_slot_exhaustion_backfill_ordering(smol):
+    """5 requests through 2 slots: admissions stay FIFO and never exceed
+    completions + slot count (a request only enters when a slot frees)."""
+    cfg, params = smol
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_len=32))
+    reqs = _reqs(cfg, [(5, 4), (7, 6), (3, 3), (6, 5), (4, 4)])
+    admitted, completed = [], []
+
+    def on_token(rid, tok, idx, done):
+        if idx == 0:
+            admitted.append(rid)
+            assert len(admitted) <= len(completed) + 2, (
+                "admitted a request with no free slot"
+            )
+        if done:
+            completed.append(rid)
+
+    outs = eng.run(reqs, on_token=on_token)
+    assert admitted == [0, 1, 2, 3, 4]  # FIFO backfill
+    assert sorted(completed) == [0, 1, 2, 3, 4]
+    assert [len(o) for o in outs] == [4, 6, 3, 5, 4]
+
+
+def test_out_of_order_completion(smol):
+    """A short request finishes first; its slot is backfilled while the
+    long request keeps decoding."""
+    cfg, params = smol
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_len=48))
+    reqs = _reqs(cfg, [(5, 12), (5, 2), (5, 3)])
+    events = []
+    outs = eng.run(
+        reqs,
+        on_token=lambda rid, tok, idx, done: events.append((rid, idx, done)),
+    )
+    done_order = [rid for rid, _, done in events if done]
+    assert done_order == [1, 2, 0]
+    # request 2 was admitted strictly before request 0 finished
+    admit_2 = events.index((2, 0, False))
+    done_0 = events.index((0, 11, True))
+    assert admit_2 < done_0
+    assert [len(o) for o in outs] == [12, 2, 3]
+
+
+def test_max_new_tokens_and_max_len_truncation(smol):
+    cfg, params = smol
+    scfg = ServeConfig(batch=2, max_len=16)
+    eng = Engine(cfg, params, scfg)
+    rng = np.random.default_rng(3)
+    long_prompt = rng.integers(0, cfg.vocab, 30).astype(np.int32)
+    outs = eng.run(
+        [
+            # prompt 10 + max_new 20 > max_len 16: generation stops at 6
+            Request(rng.integers(0, cfg.vocab, 10).astype(np.int32), 20),
+            # prompt 30 >= max_len: keeps the last 15 tokens, 1-token budget
+            Request(long_prompt, 20),
+            Request(rng.integers(0, cfg.vocab, 4).astype(np.int32), 3),
+        ]
+    )
+    assert [len(o) for o in outs] == [6, 1, 3]
+    # the truncated prompt behaves exactly like its explicit suffix
+    solo = Engine(cfg, params, scfg).run([Request(long_prompt[-15:], 20)])
+    assert np.array_equal(solo[0], outs[1])
+
+
+def test_nonpositive_budget_returns_empty(smol):
+    cfg, params = smol
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_len=32))
+    outs = eng.run(
+        [Request(np.array([1, 2, 3], np.int32), 0), Request(np.array([4], np.int32), 2)]
+    )
+    assert outs[0].shape == (0,)
+    assert outs[1].shape == (2,)
+
+
+def test_bitwise_determinism_across_arrival_order(smol):
+    """Fixed seed + explicit request ids: outputs are bitwise identical
+    whatever the submission order, slot count, or prefill bucketing."""
+    cfg, params = smol
+    spec = [(5, 6), (12, 9), (3, 4), (7, 5), (9, 8), (4, 7)]
+    base = _reqs(cfg, spec, seed=5)
+
+    def run(order, batch, bucket=0):
+        eng = Engine(
+            cfg,
+            params,
+            ServeConfig(
+                batch=batch,
+                max_len=64,
+                temperature=0.8,
+                seed=11,
+                prefill_bucket=bucket,
+            ),
+        )
+        outs = eng.run([base[i] for i in order])
+        return {order[j]: outs[j].tolist() for j in range(len(order))}
+
+    a = run([0, 1, 2, 3, 4, 5], 3)
+    b = run([5, 2, 0, 4, 1, 3], 3)
+    c = run([0, 1, 2, 3, 4, 5], 2)
+    d = run([3, 1, 5, 0, 2, 4], 4, bucket=16)
+    assert a == b == c == d
+
+
+def test_slot_isolation_matches_solo_run(smol):
+    """A request's tokens don't depend on its batch-mates (per-slot cache
+    independence) — continuous batched output == solo output, bitwise."""
+    cfg, params = smol
+    scfg = ServeConfig(batch=3, max_len=64, temperature=0.7, seed=2)
+    reqs = _reqs(cfg, [(5, 8), (12, 16), (3, 4), (7, 6), (9, 12)], seed=1)
+    outs = Engine(cfg, params, scfg).run(reqs)
+    for i in (0, 2, 4):
+        solo = Engine(cfg, params, scfg).run([reqs[i]])[0]
+        assert np.array_equal(solo, outs[i]), f"request {i} not isolated"
+
+
+def test_greedy_matches_static_engine(smol):
+    """Greedy continuous output == the static-batch baseline when the
+    static batch needs no left-padding (equal prompt lengths)."""
+    cfg, params = smol
+    scfg = ServeConfig(batch=2, max_len=48)
+    reqs = _reqs(cfg, [(6, 5), (6, 7), (6, 4), (6, 6)], seed=2)
+    cont = Engine(cfg, params, scfg).run(reqs)
+    stat = StaticEngine(cfg, params, scfg).generate(reqs)
+    for c, s in zip(cont, stat):
+        assert np.array_equal(c, s)
+
+
+@pytest.mark.parametrize(
+    "arch", ["gemma3-12b", "rwkv6-1.6b", "recurrentgemma-2b", "granite-moe-1b-a400m"]
+)
+def test_families_slot_isolation(arch):
+    """Ring-buffer, recurrent, hybrid and MoE caches all survive slot
+    admission/eviction: batched output == solo output, bitwise."""
+    cfg = get(arch + "-smoke")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch=2, max_len=32, temperature=0.5, seed=3)
+    rng = np.random.default_rng(4)
+    reqs = [
+        Request(rng.integers(0, cfg.vocab, n).astype(np.int32), m, request_id=i)
+        for i, (n, m) in enumerate([(6, 5), (9, 7), (4, 4)])
+    ]
+    outs = Engine(cfg, params, scfg).run(reqs)
+    solo = Engine(cfg, params, scfg).run([reqs[1]])[0]
+    assert np.array_equal(solo, outs[1])
+    assert [len(o) for o in outs] == [5, 7, 4]
+
+
+def test_engine_rejects_encdec():
+    cfg = get("whisper-medium-smoke")
+    with pytest.raises(ValueError):
+        Engine(cfg, None, ServeConfig())
+
+
+# ----------------------------------------------------- kvcache primitives --
+
+
+def test_slot_store_take_roundtrip():
+    cfg = get("recurrentgemma-2b-smoke")  # hybrid: deepest axis variety
+    axes = kvcache.slot_axes(cfg, 16)
+    big = kvcache.build_caches(cfg, 3, 16)
+    small = jax.tree.map(
+        lambda leaf, ax: jnp.ones_like(
+            jax.lax.dynamic_slice_in_dim(leaf, 0, 1, axis=ax)
+        ),
+        big,
+        axes,
+    )
+    big2 = kvcache.slot_store(big, small, jnp.int32(1), axes)
+    got = kvcache.take_slot(big2, 1, axes)
+    assert all(
+        bool(jnp.all(a == b))
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(small))
+    )
+    # other slots untouched
+    other = kvcache.take_slot(big2, 0, axes)
+    ref = kvcache.take_slot(big, 0, axes)
+    assert all(
+        bool(jnp.all(a == b))
+        for a, b in zip(jax.tree.leaves(other), jax.tree.leaves(ref))
+    )
+
+
+def test_mask_prompt_tail_per_row():
+    cfg = get("smollm-360m-smoke")
+    caches = kvcache.build_caches(cfg, 2, 8)
+    # pretend a padded prefill filled all 8 positions on both rows
+    caches = jax.tree_util.tree_map_with_path(
+        lambda p, leaf: (
+            jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), leaf.shape)
+            if kvcache._leaf_name(p) == "pos"
+            else leaf
+        ),
+        caches,
+    )
+    fixed = kvcache.mask_prompt_tail(caches, jnp.asarray([3, 5]))
+
+    def leafdict(tree):
+        return {
+            kvcache._leaf_name(p): leaf
+            for p, leaf in jax.tree_util.tree_leaves_with_path(tree)
+        }
+
+    pos = leafdict(fixed)["pos"]  # (layers, 2, 8)
+    assert np.array_equal(np.asarray(pos[0, 0]), [0, 1, 2] + [10**9] * 5)
+    assert np.array_equal(np.asarray(pos[0, 1]), [0, 1, 2, 3, 4] + [10**9] * 3)
+    assert np.array_equal(np.asarray(leafdict(fixed)["len"][0]), [3, 5])
+
+
+def test_supports_padded_prefill_matrix():
+    assert kvcache.supports_padded_prefill(get("smollm-360m-smoke"))
+    assert not kvcache.supports_padded_prefill(get("gemma3-12b-smoke"))
+    assert not kvcache.supports_padded_prefill(get("rwkv6-1.6b-smoke"))
+    assert not kvcache.supports_padded_prefill(get("granite-moe-1b-a400m-smoke"))

@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, data pipeline, checkpointing, gradient
 compression, sharding plan rules."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -170,8 +169,6 @@ def test_param_rules_shapes():
 
 
 def test_uneven_dims_fall_back_to_replication():
-    mesh = jax.make_mesh((1,), ("model",))
-
     class FakeMesh:
         axis_names = ("model",)
         shape = {"model": 16}

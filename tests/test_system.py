@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get
-from repro.data.pipeline import DataConfig, Pipeline
+from repro.data.pipeline import DataConfig
 from repro.serve.engine import Engine, Request, ServeConfig
 from repro.train import optim
 from repro.train.loop import TrainConfig, train
