@@ -1,18 +1,22 @@
 """Guard the committed BENCH_*.json speedups against silent regression.
 
-Re-measures the PR-1 batched-pricing engine and the PR-2 vectorized
-simulator on reduced budgets and compares against the committed
-BENCH_mapper.json / BENCH_simulate.json claims:
+Re-measures the PR-1 batched-pricing engine, the PR-2 vectorized
+simulator, and the PR-3/4 serve engine (continuous-vs-static batching at
+equal slots, solo-bitwise outputs) on reduced budgets and compares against
+the committed BENCH_mapper.json / BENCH_simulate.json / BENCH_serve.json
+claims:
 
     PYTHONPATH=src python -m benchmarks.check_regress [--full] [--tol 0.15]
 
 The tolerance is deliberately generous (default: fresh speedup must reach
-15% of the committed one) because CI runners are noisy and shared — the
-guard exists to catch the engine quietly falling back to a scalar path or
-losing an order of magnitude, not 2x jitter.  ``--full`` additionally
-re-runs the end-to-end optimize_network sweep (minutes).  Both fresh runs
-re-assert bit-identity against the scalar oracles, so correctness rot
-fails the guard too.
+15% of the committed one; the serve ratio, being O(1.3-2x), uses its own
+``--serve-tol`` floor fraction) because CI runners are noisy and shared —
+the guard exists to catch the engine quietly falling back to a scalar path
+or losing an order of magnitude, not 2x jitter.  ``--full`` additionally
+re-runs the end-to-end optimize_network sweep (minutes).  The fresh runs
+re-assert correctness against their oracles (bit-identity for the
+simulator/pricer, batched-equals-solo bitwise sampling for serving), so
+correctness rot fails the guard too.
 """
 
 from __future__ import annotations
@@ -55,18 +59,35 @@ def main() -> None:
         action="store_true",
         help="also re-run the end-to-end optimize_network sweep (minutes)",
     )
+    ap.add_argument(
+        "--serve-tol",
+        type=float,
+        default=0.5,
+        help="fresh continuous-vs-static ratio must reach this fraction "
+        "of the committed one (serve ratios are O(1.3-2x), so the "
+        "generic --tol would never trip)",
+    )
     ap.add_argument("--mapper-json", default="BENCH_mapper.json")
     ap.add_argument("--simulate-json", default="BENCH_simulate.json")
+    ap.add_argument("--serve-json", default="BENCH_serve.json")
     args = ap.parse_args()
 
-    from benchmarks import perf_compare
+    from benchmarks import perf_compare, serve_bench
 
     mapper = _load(args.mapper_json)
     simulate = _load(args.simulate_json)
+    serve = _load(args.serve_json)
     if not simulate.get("bit_identical", False):
         sys.exit("committed BENCH_simulate.json lost bit_identical=true")
     if not mapper["optimize_network"].get("identical_best", False):
         sys.exit("committed BENCH_mapper.json lost identical_best=true")
+    if not serve.get("solo_outputs_identical", False):
+        sys.exit("committed BENCH_serve.json lost solo_outputs_identical=true")
+    if serve["attention_ab"]["flash_vs_oracle_speedup"] < 1.0:
+        sys.exit(
+            "committed BENCH_serve.json: flash-decoding slower than the "
+            "masked-oracle attend path"
+        )
 
     failures = []
 
@@ -85,6 +106,28 @@ def main() -> None:
         fresh_sim = perf_compare.run_simulate(os.path.join(tmp, "sim.json"), n=16)
     if not _check("simulate", simulate["speedup"], fresh_sim["speedup"], args.tol):
         failures.append("simulate")
+
+    # PR 3/4: continuous-vs-static serve throughput at equal slots, on a
+    # reduced workload; the fresh run re-asserts batched-equals-solo
+    # bitwise sampling internally
+    fresh_serve = serve_bench.run(
+        slots=serve["slots"],
+        max_len=serve["max_len"],
+        n_requests=8,
+        repeats=2,
+        out_path=None,
+        scaling=False,
+        ab=False,
+    )
+    if not fresh_serve["solo_outputs_identical"]:
+        failures.append("serve solo-bitwise")
+    if not _check(
+        "serve continuous/static",
+        serve["speedup_tokens_per_s"],
+        fresh_serve["speedup_tokens_per_s"],
+        args.serve_tol,
+    ):
+        failures.append("serve continuous/static")
 
     if args.full:
         fresh_sweep = perf_compare.bench_network_sweep()

@@ -1,6 +1,6 @@
 """Attention compute paths.
 
-Three implementations with one contract:
+Four implementations with one contract:
 
   * dense       — einsum + softmax, for short sequences (scores materialize).
   * blockwise   — lax.scan over (q-block, kv-block) tiles with online softmax
@@ -8,6 +8,13 @@ Three implementations with one contract:
                   default for long sequences; it is also the pure-jnp oracle
                   shape for the Pallas kernel in kernels/flash_attention.
   * Pallas      — kernels/flash_attention (TPU target); opt-in via ops.py.
+  * flash-decoding — the serve decode hot path: one query token per slot
+                  attends over a ragged KV prefix
+                  (kernels/flash_attention/decode_attention).  Dispatched by
+                  :func:`attend` when the caller passes per-slot
+                  ``decode_lengths`` and opts in with ``decode_impl="flash"``;
+                  the position-masked dense/blockwise path below stays the
+                  differential oracle for it.
 
 All paths take grouped-query tensors:
     q: (B, Tq, KV, G, hd)   k/v: (B, Tk, KV, hd)
@@ -188,9 +195,30 @@ def attend(
     kv_len: jax.Array | None = None,
     dense_threshold: int = 2048 * 2048,
     causal_skip: bool = False,
+    decode_lengths: jax.Array | None = None,
+    decode_impl: str | None = None,
 ) -> jax.Array:
-    """Dispatch dense vs blockwise by live-score size."""
+    """Dispatch dense vs blockwise by live-score size — or, for cached
+    single-token decode, the ragged flash-decoding kernel.
+
+    ``decode_lengths`` (per-row live KV slot counts, ``(B,)`` int32) plus
+    ``decode_impl="flash"`` routes Tq==1 through
+    ``kernels.flash_attention.ops.decode_attention``, which masks *only* by
+    slot index < length.  That single ragged bound is equivalent to this
+    module's full causal + window + empty-sentinel mask recipe under the
+    serve ring invariant (``slot(pos) = pos % size`` with ``size <=
+    window``): live slots hold exactly the positions ``new_len - min(
+    new_len, size) .. new_len - 1``, all of which pass the causal test
+    against ``q_pos = new_len - 1`` and sit inside the window, while empty
+    or overwritten-pad slots lie at indices >= ``min(new_len, size)``.
+    Callers must NOT pass ``decode_lengths`` when that invariant does not
+    hold (layers.multihead_attention gates on it).  The masked dense path
+    below is the differential oracle for the kernel."""
     Tq, Tk = q.shape[1], k.shape[1]
+    if decode_lengths is not None and decode_impl == "flash" and Tq == 1:
+        from repro.kernels.flash_attention.ops import decode_attention
+
+        return decode_attention(q[:, 0], k, v, decode_lengths)[:, None]
     if Tq * Tk <= dense_threshold:
         return dense_attention(
             q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,

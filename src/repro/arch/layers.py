@@ -86,23 +86,43 @@ class prefill_aligned:
         _PREFILL_ALIGNED[0] = False
 
 
-# trace-time override for the dense projection GEMMs: the serve engine
-# routes decode-step matmuls through the Pallas kernel with mapper-chosen
-# tiles (kernels/matmul/ops.py) by tracing under `with matmul_override(f)`.
-# None = plain jnp dot (the training/default path, bit-identical to before).
+# trace-time overrides, each a one-slot stack swapped for the duration of
+# a `with` block:
+#   * matmul_override: route the dense projection GEMMs through the Pallas
+#     kernel with mapper-chosen tiles (kernels/matmul/ops.py).  None =
+#     plain jnp dot (the training/default path, bit-identical to before).
+#   * attention_override: route cached single-token decode attention
+#     through the ragged flash-decoding kernel
+#     (kernels/flash_attention/decode_attention) with per-slot live
+#     lengths instead of the broadcast position mask.  None = the
+#     dense/blockwise oracle path.
 _MATMUL_IMPL: list = [None]
+_ATTENTION_IMPL: list = [None]
 
 
-class matmul_override:
-    def __init__(self, impl):
-        self.impl = impl
+class _override:
+    def __init__(self, slot: list, value):
+        self._slot = slot
+        self._value = value
 
     def __enter__(self):
-        self._prev = _MATMUL_IMPL[0]
-        _MATMUL_IMPL[0] = self.impl
+        self._prev = self._slot[0]
+        self._slot[0] = self._value
 
     def __exit__(self, *a):
-        _MATMUL_IMPL[0] = self._prev
+        self._slot[0] = self._prev
+
+
+def matmul_override(impl) -> _override:
+    return _override(_MATMUL_IMPL, impl)
+
+
+def attention_override(impl: str | None) -> _override:
+    if impl not in (None, "flash"):
+        # anything unrecognized would silently run the oracle while the
+        # caller believes the kernel is active
+        raise ValueError(f"attention impl must be None or 'flash': {impl!r}")
+    return _override(_ATTENTION_IMPL, impl)
 
 
 def _mm(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -146,9 +166,16 @@ def multihead_attention(
     window: int | None = None,
     use_rope: bool = True,
     cache: dict | None = None,
+    ragged_ok: bool | None = None,
 ) -> tuple[jax.Array, dict | None]:
     """GQA attention; with `cache` given, appends this step's K/V into the
-    (ring) buffer and attends over it.  Returns (out, new_cache)."""
+    (ring) buffer and attends over it.  Returns (out, new_cache).
+
+    ``ragged_ok`` asserts the ring invariant the flash-decoding path needs
+    (every live cache slot is inside the layer's window — true whenever the
+    ring extent <= window).  None = derive it locally from a static
+    ``window``; scanned (traced) windows must pass the hint explicitly or
+    the decode stays on the oracle path."""
     from repro.arch.attention import attend
 
     B, Tq, D = x.shape
@@ -183,6 +210,8 @@ def multihead_attention(
 
     new_cache = None
     kv_len = None
+    decode_lengths = None
+    attn_impl = _ATTENTION_IMPL[0]
     if cache is not None:
         size = cache["k"].shape[1]
         # per-row insert positions (rows may differ under slot batching)
@@ -202,6 +231,18 @@ def multihead_attention(
             "k": ck, "v": cv, "pos": cpos, "len": cache["len"] + Tq,
         }
         k, v, k_pos = ck, cv, cpos
+        # ragged flash-decoding: one query token per slot attends over
+        # live cache slots [0, min(len + 1, size)) — equivalent to the
+        # position-mask recipe when the ring extent fits the window (see
+        # attention.attend).  Scanned traced windows can't be checked
+        # here; those callers pass ragged_ok from static layer metadata.
+        if attn_impl is not None and Tq == 1 and kv_x is None:
+            if ragged_ok is None:
+                ragged_ok = window is None or (
+                    not isinstance(window, jax.Array) and size <= int(window)
+                )
+            if ragged_ok:
+                decode_lengths = jnp.minimum(new_cache["len"], size)
 
     g = h // kv
     qg = q.reshape(B, Tq, kv, g, hd)
@@ -214,6 +255,7 @@ def multihead_attention(
     ctx = attend(
         qg, k, v, q_pos=positions, k_pos=k_pos, causal=causal,
         window=window, kv_len=kv_len, causal_skip=skip_ok,
+        decode_lengths=decode_lengths, decode_impl=attn_impl,
     ).reshape(B, Tq, h * hd)
     return _mm(ctx, params["wo"]), new_cache
 

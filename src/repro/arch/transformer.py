@@ -86,10 +86,12 @@ def attn_block_apply(
     window: jax.Array | int | None,
     positions: jax.Array | None,
     cache: dict | None,
+    ragged_ok: bool | None = None,
 ) -> tuple[jax.Array, dict | None, jax.Array]:
     h, new_cache = L.multihead_attention(
         p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps),
         positions=positions, causal=True, window=window, cache=cache,
+        ragged_ok=ragged_ok,
     )
     x = x + h
     z = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -205,10 +207,20 @@ class Model:
                 y, nc, aux = rwkv_block_apply(p, cfg, x, cache=c)
                 return y, (nc, aux)
         else:
+            # the scan traces per-layer windows, so the ragged-decode ring
+            # invariant (ring extent <= window, with stacked caches padded
+            # to the largest extent) is checked statically here, over ALL
+            # scanned layers, and passed down as a hint
+            ragged = None
+            if caches is not None:
+                size = caches["k"].shape[2]
+                ragged = bool((layer_windows(cfg) >= size).all())
+
             def body(x, p_c_w):
                 p, c, w = p_c_w
                 y, nc, aux = attn_block_apply(
                     p, cfg, x, window=w, positions=positions, cache=c,
+                    ragged_ok=ragged,
                 )
                 return y, (nc, aux)
 

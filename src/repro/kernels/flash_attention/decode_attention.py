@@ -1,0 +1,197 @@
+"""Ragged flash-decoding Pallas kernel (single-query decode attention).
+
+Flash-decoding is the FlashAttention online-softmax recurrence split along
+the KV axis — the paper's blocked-loop-nest story applied to the serve hot
+loop.  One query token per (slot, kv head) attends over a ragged prefix of
+the slot's KV cache:
+
+  * grid ``(batch * kv_heads, kv_splits)``: rows are independent; the KV
+    split axis is innermost and sequential, so the online-softmax partials
+    (running max / normalizer / fp32 accumulator) live in VMEM scratch and
+    are combined across splits without materializing per-split outputs.
+  * per-row KV **lengths are a scalar-prefetch operand** (SMEM, available
+    before the body runs): a traced ``(B,)`` int32, so lengths changing
+    every decode step never recompiles, and the k/v index maps alias every
+    block past ``ceil(len/bk)`` to the last live block — consecutive equal
+    block indices elide the HBM->VMEM copy, so each slot only *reads*
+    ``ceil(len/bk)`` KV blocks.  Dead blocks also skip compute via
+    ``pl.when``.
+  * GQA is resolved **inside** the kernel: q rows are ``(G, d)`` groups and
+    the k/v index maps divide the row id by ``kv_heads`` — KV tiles are
+    fetched once per kv head, never broadcast G-fold beforehand.
+
+k/v come in the serve engine's native cache layout ``(B, S, KV, d)`` so the
+donated decode loop hands the ring buffers to the kernel with zero copies.
+
+Masking contract: a row's live keys are exactly cache slots
+``[0, lengths[b])``, with ``lengths`` clamped to ``[1, S]`` — the serve
+loop always scatters the current token before attending, so a live row has
+at least one key (length 0 is NOT a fully-masked row here; the dense ref
+is the place that models it).  The serve ring invariant (``slot(pos) = pos % size``
+with ``size <= window``) makes that single ragged bound equivalent to the
+causal + sliding-window + empty-slot mask recipe of ``arch.attention`` —
+see ``arch/attention.attend``'s decode dispatch for the derivation.
+
+:func:`decode_attention_xla` is the kernel's jnp twin for CPU serving: the
+same blocked online-softmax recurrence, vectorized over rows, with a
+``lax.while_loop`` whose trip count is ``ceil(max(lengths)/bk)`` — decode
+step time scales with the *live* length, not ``max_len``.  Contributions of
+a fully-masked block are exactly zero (``exp(NEG_INF - m)`` underflows and
+the correction factor is ``exp(0)``), so padding rows to the batch max is
+bitwise-neutral, which keeps batched serving bitwise-equal to solo runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention.flash_attention import (
+    NEG_INF,
+    finalize_out,
+    last_live_block,
+    reset_carry,
+)
+
+
+def _decode_kernel(
+    lens_ref,                     # SMEM (B,) int32 scalar-prefetch
+    q_ref,                        # (1, G, d)
+    k_ref,                        # (1, bk, 1, d)
+    v_ref,                        # (1, bk, 1, d)
+    o_ref,                        # (1, G, d)
+    m_ref, l_ref, acc_ref,        # VMEM scratch: (G,), (G,), (G, d) fp32
+    *, kv_heads: int, bk: int, n_k: int, scale: float,
+):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    length = lens_ref[bh // kv_heads]
+
+    @pl.when(j == 0)
+    def _init():
+        reset_carry(m_ref, l_ref, acc_ref)
+
+    @pl.when(j * bk < length)
+    def _live():
+        q = q_ref[0]                      # (G, d)
+        k = k_ref[0, :, 0, :]             # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                         # (G, bk)
+        k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_idx < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_k - 1)
+    def _store():
+        finalize_out(o_ref, l_ref, acc_ref)
+
+
+def flash_decode_pallas(
+    q: jax.Array,         # (B, KV, G, d) one query token per (slot, head)
+    k: jax.Array,         # (B, S, KV, d) native cache layout
+    v: jax.Array,         # (B, S, KV, d)
+    lengths: jax.Array,   # (B,) int32 live KV slots per row (traced)
+    *,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KV, G, d = q.shape
+    S = k.shape[1]
+    assert S % bk == 0, (S, bk)
+    n_k = S // bk
+    scale = 1.0 / math.sqrt(d)
+    lengths = jnp.clip(lengths.astype(jnp.int32), 1, S)
+
+    def kv_block(bh, j, lens):
+        last = last_live_block(lens[bh // KV], bk)
+        return (bh // KV, jnp.minimum(j, last), bh % KV, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * KV, n_k),
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda bh, j, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), kv_block),
+            pl.BlockSpec((1, bk, 1, d), kv_block),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda bh, j, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _decode_kernel, kv_heads=KV, bk=bk, n_k=n_k, scale=scale,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q.reshape(B * KV, G, d), k, v)
+    return out.reshape(B, KV, G, d)
+
+
+def decode_attention_xla(
+    q: jax.Array,         # (B, KV, G, d)
+    k: jax.Array,         # (B, S, KV, d)
+    v: jax.Array,         # (B, S, KV, d)
+    lengths: jax.Array,   # (B,) int32
+    *,
+    bk: int = 128,
+) -> jax.Array:
+    """The kernel's jnp twin: same blocked recurrence, rows vectorized,
+    while-loop trip count = the batch's deepest live split."""
+    B, KV, G, d = q.shape
+    S = k.shape[1]
+    assert S % bk == 0, (S, bk)
+    scale = 1.0 / math.sqrt(d)
+    lengths = jnp.clip(lengths.astype(jnp.int32), 1, S)
+    n_live = jnp.max((lengths + bk - 1) // bk)
+
+    def body(state):
+        j, m, l, acc = state
+        kb = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=1)
+        s = jnp.einsum(
+            "bhgd,bshd->bhgs", q, kb, preferred_element_type=jnp.float32
+        ) * scale                                       # (B, KV, G, bk)
+        k_idx = j * bk + jnp.arange(bk, dtype=jnp.int32)
+        live = k_idx[None, :] < lengths[:, None]        # (B, bk)
+        s = jnp.where(live[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgs,bshd->bhgd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return j + 1, m_new, l, acc
+
+    state = (
+        jnp.int32(0),
+        jnp.full((B, KV, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G), jnp.float32),
+        jnp.zeros((B, KV, G, d), jnp.float32),
+    )
+    _, _, l, acc = jax.lax.while_loop(lambda st: st[0] < n_live, body, state)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

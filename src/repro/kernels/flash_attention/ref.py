@@ -34,3 +34,21 @@ def flash_attention_ref(
     s = jnp.where(ok[None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, KV, G, d)
+    k: jax.Array,        # (B, S, KV, d)
+    v: jax.Array,        # (B, S, KV, d)
+    lengths: jax.Array,  # (B,) int32
+) -> jax.Array:
+    """Dense-softmax oracle for ragged flash-decoding: row b attends over
+    exactly cache slots [0, lengths[b])."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhgd,bshd->bhgs", q, k).astype(jnp.float32) / math.sqrt(d)
+    live = jnp.arange(k.shape[1])[None, :] < lengths[:, None]   # (B, S)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v.dtype), v
+    ).astype(q.dtype)

@@ -44,6 +44,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prefill-bucket", type=int, default=16)
     ap.add_argument("--matmul", choices=("xla", "pallas"), default="xla")
+    ap.add_argument("--attention", choices=("flash", "xla"), default="flash",
+                    help="decode-attention substrate: ragged flash-decoding "
+                         "or the masked dense/blockwise oracle")
     ap.add_argument("--static", action="store_true",
                     help="run the padded static-batch baseline instead")
     args = ap.parse_args()
@@ -55,6 +58,7 @@ def main():
         batch=args.slots, max_len=args.max_len,
         temperature=args.temperature, seed=args.seed,
         prefill_bucket=args.prefill_bucket, matmul=args.matmul,
+        attention=args.attention,
     )
     reqs = make_workload(cfg, args.requests, args.new_tokens, args.seed)
 

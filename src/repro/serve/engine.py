@@ -18,12 +18,28 @@ Sampling keys are derived per request as ``fold_in(fold_in(seed, rid), t)``
 so outputs are bitwise-deterministic for a fixed seed regardless of arrival
 order or slot assignment (slot rows are computationally independent).
 
+The decode hot loop is memory-shaped (the paper's words-per-MAC argument at
+serve granularity), so both of its memory sins are fixed here:
+
+  * **flash-decoding attention** (``ServeConfig(attention="flash")``, the
+    default): single-token attention routes through the ragged Pallas
+    decode kernel (``kernels/flash_attention/decode_attention``; jnp twin
+    on CPU) with per-slot live lengths traced, so each slot reads
+    ``ceil(len/bk)`` KV blocks instead of scanning all ``max_len`` slots
+    through a broadcast mask.  ``attention="xla"`` keeps the masked
+    dense/blockwise oracle as the measured baseline.
+  * **donated KV caches**: ``_decode``/``_admit_group`` donate the cache
+    pytree, so the per-row ring scatter updates the buffers in place — no
+    per-step copy of every KV tensor (the engine always rebinds
+    ``self.caches`` to the jit output; the donated input is dead).
+
 Decode GEMMs can be routed through the Pallas matmul with tile sizes from
 the paper's blocking search (``core.mapper.choose_matmul_tiles``) exactly
 like ``kernels/matmul/ops.py`` — enable with ``ServeConfig(matmul="pallas")``.
 
 The pre-continuous static-batch loop survives as :class:`StaticEngine`, the
-baseline that ``benchmarks/serve_bench.py`` measures against.
+baseline that ``benchmarks/serve_bench.py`` measures against; it follows the
+same ``attention`` setting so the A/B isolates scheduling.
 """
 
 from __future__ import annotations
@@ -66,6 +82,20 @@ class ServeConfig:
     # "xla" | "pallas": route projection GEMMs through the Pallas kernel
     # with mapper-chosen tiles (core.mapper.choose_matmul_tiles)
     matmul: str = "xla"
+    # "flash" | "xla": decode-attention substrate.  "flash" (default) is
+    # the ragged flash-decoding path (per-slot live lengths, KV reads
+    # scale with live length); "xla" is the masked dense/blockwise oracle.
+    attention: str = "flash"
+
+    def __post_init__(self):
+        # silent fallbacks would report oracle numbers as flash (or xla
+        # GEMMs as pallas) — reject anything outside the known substrates
+        if self.matmul not in ("xla", "pallas"):
+            raise ValueError(f"matmul must be 'xla' or 'pallas': {self.matmul!r}")
+        if self.attention not in ("flash", "xla"):
+            raise ValueError(
+                f"attention must be 'flash' or 'xla': {self.attention!r}"
+            )
 
 
 @dataclasses.dataclass
@@ -97,6 +127,7 @@ class Engine:
         self.params = params
         self.scfg = scfg
         self._impl = _pallas_mm if scfg.matmul == "pallas" else None
+        self._attn = "flash" if scfg.attention == "flash" else None
 
         self.caches = kvcache.build_caches(cfg, scfg.batch, scfg.max_len)
         self._axes = kvcache.slot_axes(cfg, scfg.max_len)
@@ -108,6 +139,7 @@ class Engine:
         self._cur_tok = np.zeros((scfg.batch,), np.int32)
 
         model, impl, axes = self.model, self._impl, self._axes
+        attn = self._attn
         max_len = scfg.max_len
         key0 = jax.random.PRNGKey(scfg.seed)
         temp = scfg.temperature
@@ -121,7 +153,7 @@ class Engine:
             return jax.random.fold_in(jax.random.fold_in(key0, rid), t)
 
         def decode_fn(params, toks, caches, rids, ts):
-            with L.matmul_override(impl):
+            with L.matmul_override(impl), L.attention_override(attn):
                 logits, caches = model.decode_step(params, toks, caches)
             nxt = jax.vmap(lambda lg, r, t: sample_one(lg, req_key(r, t)))(
                 logits, rids, ts
@@ -148,8 +180,12 @@ class Engine:
             )(logits, rids)
             return toks0, big
 
-        self._decode = jax.jit(decode_fn)
-        self._admit_group = jax.jit(admit_fn)
+        # the KV cache pytree is DONATED: the ring scatter and admission
+        # slot_store update the buffers in place instead of copying every
+        # KV tensor per step.  The engine immediately rebinds self.caches
+        # to the jit output, so the consumed input is never read again.
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+        self._admit_group = jax.jit(admit_fn, donate_argnums=(2,))
 
     # ---------------------------------------------------------- admission --
     def submit(self, req: Request) -> int:
@@ -296,15 +332,31 @@ class StaticEngine:
     """The pre-continuous static-batch engine, kept as the measured
     baseline: requests are packed into fixed batches, left-padded to the
     longest prompt, and decoded in lockstep to the largest
-    ``max_new_tokens`` in the batch."""
+    ``max_new_tokens`` in the batch.  It shares the continuous engine's
+    decode-attention substrate and donated caches, so the serve bench A/B
+    measures scheduling, not kernels."""
 
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
         self.cfg = cfg
         self.model = build(cfg)
         self.params = params
         self.scfg = scfg
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step)
+        model = self.model
+        impl = _pallas_mm if scfg.matmul == "pallas" else None
+        attn = "flash" if scfg.attention == "flash" else None
+
+        def prefill_fn(params, toks, caches):
+            with L.matmul_override(impl):
+                return model.prefill(params, toks, caches)
+
+        def decode_fn(params, toks, caches):
+            with L.matmul_override(impl), L.attention_override(attn):
+                return model.decode_step(params, toks, caches)
+
+        self._prefill = jax.jit(prefill_fn)
+        # same matmul/attention substrates + donated caches as the
+        # continuous engine, so the bench A/B isolates scheduling
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
 
     def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
         if self.scfg.temperature <= 0:

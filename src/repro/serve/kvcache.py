@@ -23,6 +23,16 @@ Slot semantics: admission fully overwrites a slot (the prefilled batch-1
 cache starts from zeros, so stale K/V, ``pos`` sentinels and recurrent
 states are all replaced); eviction is free — a dead slot keeps decoding
 garbage that nothing reads, and the next admission overwrites it.
+
+Donation contract: the engine donates this whole pytree through its jitted
+decode/admission programs, so every per-step mutation must be expressible
+as an in-place alias of the donated buffers — which is why the primitives
+here are ``dynamic_update_slice`` scatters (``slot_store``) and the decode
+ring write is a per-row ``.at[idx].set`` (layers.multihead_attention): XLA
+aliases donated inputs to outputs and the KV tensors are never copied.
+The ragged flash-decoding path additionally relies on the ring invariant
+these writes maintain — live entries of every cache occupy exactly slots
+``[0, min(len, size))`` — to reduce decode masking to one per-row length.
 """
 
 from __future__ import annotations

@@ -1,0 +1,204 @@
+"""Ragged flash-decoding differential tests.
+
+The Pallas kernel body runs in interpret mode on CPU (so CI exercises the
+real kernel, not just its jnp twin) against three oracles: the dense ragged
+reference, `arch.attention.dense_attention` with the serve engine's
+position-mask recipe (global and sliding-window ring caches), and the
+`decode_attention_xla` while-loop twin that CPU serving uses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arch.attention import dense_attention
+from repro.kernels.flash_attention.decode_attention import decode_attention_xla
+from repro.kernels.flash_attention.ops import decode_attention, flash_attention
+from repro.kernels.flash_attention.ref import decode_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, S, KV, G, d, dtype=jnp.float32):
+    q = jax.random.normal(KEY, (B, KV, G, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, d), dtype)
+    return q, k, v
+
+
+def _tol(dtype):
+    return (
+        dict(rtol=2e-2, atol=2e-2)
+        if dtype == jnp.bfloat16
+        else dict(rtol=2e-5, atol=2e-5)
+    )
+
+
+# --------------------------------------------------- kernel vs dense oracle
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bk", [8, 16, 32])  # 4 / 2 / 1 kv splits
+def test_decode_kernel_ragged_lengths(bk, dtype):
+    B, S, KV, G, d = 4, 32, 2, 2, 16
+    q, k, v = _qkv(B, S, KV, G, d, dtype)
+    lengths = jnp.asarray([1, 7, 13, 32], jnp.int32)
+    want = decode_attention_ref(q, k, v, lengths)
+    got = decode_attention(
+        q, k, v, lengths, bk=bk, impl="pallas", interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("KV,G", [(1, 1), (1, 4), (2, 2), (3, 1), (2, 4)])
+def test_decode_kernel_gqa_ratios(KV, G):
+    """KV heads are indexed inside the kernel — every grouping ratio must
+    agree with the reference (which broadcasts explicitly)."""
+    B, S, d = 3, 24, 8
+    q, k, v = _qkv(B, S, KV, G, d)
+    lengths = jnp.asarray([3, 24, 11], jnp.int32)
+    want = decode_attention_ref(q, k, v, lengths)
+    got = decode_attention(
+        q, k, v, lengths, bk=8, impl="pallas", interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_decode_xla_twin_matches_kernel():
+    """The while-loop jnp twin (the CPU serving substrate) computes the
+    same blocked recurrence as the kernel body."""
+    B, S, KV, G, d = 3, 64, 2, 2, 16
+    q, k, v = _qkv(B, S, KV, G, d)
+    lengths = jnp.asarray([5, 40, 64], jnp.int32)
+    a = decode_attention(q, k, v, lengths, bk=16, impl="pallas",
+                         interpret=True)
+    b = decode_attention_xla(q, k, v, lengths, bk=16)
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_decode_batched_bitwise_equals_solo(impl):
+    """Slot isolation at the kernel level: a row's output must be bitwise
+    identical whether it decodes alone or batched with longer rows (dead
+    blocks contribute exactly zero) — the property the serve engine's
+    solo-vs-batched determinism suite rests on."""
+    B, S, KV, G, d = 3, 32, 2, 2, 16
+    q, k, v = _qkv(B, S, KV, G, d)
+    lengths = jnp.asarray([4, 19, 32], jnp.int32)
+    kw = dict(bk=8, impl=impl, interpret=(impl == "pallas") or None)
+    batched = decode_attention(q, k, v, lengths, **kw)
+    for i in range(B):
+        solo = decode_attention(
+            q[i : i + 1], k[i : i + 1], v[i : i + 1], lengths[i : i + 1], **kw
+        )
+        assert np.array_equal(np.asarray(solo[0]), np.asarray(batched[i])), i
+
+
+# ------------------------------------------- vs the serve-engine mask recipe
+
+
+def test_decode_matches_engine_mask_global():
+    """Global-attention slot cache: ragged length == the engine's
+    causal + empty-sentinel position mask (dense_attention oracle)."""
+    B, S, KV, G, d = 3, 16, 2, 2, 8
+    q, k, v = _qkv(B, S, KV, G, d)
+    lengths = jnp.asarray([2, 9, 16], jnp.int32)  # live slots incl. new tok
+    idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(idx < lengths[:, None], idx, 10**9)  # empty sentinel
+    q_pos = lengths[:, None] - 1                           # current token
+    want = dense_attention(
+        q[:, None].transpose(0, 1, 2, 3, 4).reshape(B, 1, KV, G, d),
+        k, v, q_pos=q_pos, k_pos=k_pos, causal=True,
+    )[:, 0]
+    got = decode_attention(
+        q, k, v, lengths, bk=8, impl="pallas", interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("new_len", [3, 8, 13, 20])
+def test_decode_matches_engine_mask_sliding_window_ring(new_len):
+    """Sliding-window ring cache (size == window): the ring invariant
+    slot(p) = p % size makes the single ragged bound equivalent to the
+    causal + window mask over the ring's absolute positions."""
+    W = 8  # ring size == window
+    B, KV, G, d = 1, 2, 2, 8
+    q, k, v = _qkv(B, W, KV, G, d)
+    # absolute position living in each ring slot after new_len writes
+    slots = np.full((W,), 10**9, np.int64)
+    for p in range(new_len):
+        slots[p % W] = p
+    k_pos = jnp.asarray(slots[None, :], jnp.int32)
+    q_pos = jnp.asarray([[new_len - 1]], jnp.int32)
+    want = dense_attention(
+        q[:, None].reshape(B, 1, KV, G, d), k, v,
+        q_pos=q_pos, k_pos=k_pos, causal=True, window=W,
+    )[:, 0]
+    lengths = jnp.asarray([min(new_len, W)], jnp.int32)
+    got = decode_attention(
+        q, k, v, lengths, bk=4, impl="pallas", interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------- compile economy
+
+
+def test_decode_lengths_do_not_recompile():
+    """Lengths are a traced scalar-prefetch operand: one compilation must
+    serve every ragged length."""
+    B, S, KV, G, d = 2, 32, 1, 2, 8
+    q, k, v = _qkv(B, S, KV, G, d)
+
+    fn = jax.jit(
+        lambda q, k, v, lens: decode_attention(
+            q, k, v, lens, bk=8, impl="pallas", interpret=True
+        )
+    )
+    for a, b in [(1, 2), (7, 31), (32, 15)]:
+        fn(q, k, v, jnp.asarray([a, b], jnp.int32)).block_until_ready()
+    if hasattr(fn, "_cache_size"):
+        assert fn._cache_size() == 1
+
+
+def test_prefill_flash_traced_kv_len_no_recompile():
+    """Satellite fix: flash_attention's q_offset/kv_len ride as traced
+    operands — distinct cached lengths share one compiled program and
+    match the per-length results bitwise."""
+    B, Tq, Tk, KV, G, d = 1, 8, 64, 2, 2, 16
+    q = jax.random.normal(KEY, (B, Tq, KV, G, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Tk, KV, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, Tk, KV, d))
+
+    fn = jax.jit(
+        lambda q, k, v, off, kl: flash_attention(
+            q, k, v, q_offset=off, kv_len=kl, bq=8, bk=16
+        )
+    )
+    outs = {}
+    for off in (10, 30, 50):
+        outs[off] = fn(
+            q, k, v, jnp.int32(off), jnp.int32(off + Tq)
+        ).block_until_ready()
+    if hasattr(fn, "_cache_size"):
+        assert fn._cache_size() == 1
+    # each traced-length result equals the eager per-length call
+    for off, got in outs.items():
+        want = flash_attention(
+            q, k, v, q_offset=off, kv_len=off + Tq, bq=8, bk=16
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6
+        )
