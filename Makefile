@@ -8,16 +8,22 @@ PY := PYTHONPATH=src python
 FMT_PATHS := src/repro/serve benchmarks/serve_bench.py \
              benchmarks/check_regress.py tests/test_serve_engine.py
 
-.PHONY: test test-fast lint validate bench bench-mapper bench-simulate \
-        bench-dse bench-serve bench-check
+.PHONY: test test-fast test-fuzz lint validate bench bench-mapper \
+        bench-simulate bench-dse bench-serve bench-check
 
 # tier-1 verify: the full suite (matches ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
-# skip the multi-minute system/validation tests
+# skip the multi-minute system/validation tests and the randomized fuzz
+# suites (CI runs those as their own named step; `make test` runs all)
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow"
+	$(PY) -m pytest -x -q -m "not slow and not fuzz"
+
+# seeded randomized property suites (paged-KV differential traces, serve
+# fuzz).  Deterministic by default; crank locally with FUZZ_EXAMPLES=N
+test-fuzz:
+	$(PY) -m pytest -q -m fuzz
 
 lint:
 	ruff check .

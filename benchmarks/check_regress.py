@@ -1,8 +1,10 @@
 """Guard the committed BENCH_*.json speedups against silent regression.
 
 Re-measures the PR-1 batched-pricing engine, the PR-2 vectorized
-simulator, and the PR-3/4 serve engine (continuous-vs-static batching at
-equal slots, solo-bitwise outputs) on reduced budgets and compares against
+simulator, the PR-3/4 serve engine (continuous-vs-static batching at
+equal slots, solo-bitwise outputs), and the PR-5 paged KV layout
+(bitwise agreement with the contiguous oracle + the iso-memory
+shared-prefix concurrency win) on reduced budgets and compares against
 the committed BENCH_mapper.json / BENCH_simulate.json / BENCH_serve.json
 claims:
 
@@ -88,6 +90,22 @@ def main() -> None:
             "committed BENCH_serve.json: flash-decoding slower than the "
             "masked-oracle attend path"
         )
+    # PR 5: the paged KV layout must stay bitwise-agreeing with the
+    # contiguous oracle, and the shared-prefix workload must keep its
+    # iso-memory concurrency win (this ratio is deterministic scheduling,
+    # not timing, so no noise tolerance applies)
+    if not serve["paged"]["agreement"]["bitwise_identical"]:
+        sys.exit("committed BENCH_serve.json: paged != contiguous bitwise")
+    if not serve["paged"]["shared_prefix"]["bitwise_identical"]:
+        sys.exit(
+            "committed BENCH_serve.json: shared-prefix paged outputs "
+            "diverged from the contiguous oracle"
+        )
+    if serve["paged"]["shared_prefix"]["admitted_concurrency_ratio"] < 1.5:
+        sys.exit(
+            "committed BENCH_serve.json: shared-prefix paged concurrency "
+            "win below the 1.5x floor"
+        )
 
     failures = []
 
@@ -118,6 +136,7 @@ def main() -> None:
         out_path=None,
         scaling=False,
         ab=False,
+        paged=False,
     )
     if not fresh_serve["solo_outputs_identical"]:
         failures.append("serve solo-bitwise")
@@ -128,6 +147,41 @@ def main() -> None:
         args.serve_tol,
     ):
         failures.append("serve continuous/static")
+
+    # PR 5: fresh paged-vs-contiguous differential on a reduced workload.
+    # Both gates are exact, not timing: the agreement bit is bitwise token
+    # equality, and the concurrency ratio is deterministic scheduling.
+    import jax
+
+    from repro.arch.model_zoo import build
+    from repro.configs.registry import get
+
+    cfg = get(serve["arch"])
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    fresh_paged = serve_bench.bench_paged(
+        cfg,
+        params,
+        slots=2,
+        seed=0,
+        n_requests=6,
+        shared_max_len=160,
+        shared_prefix=96,
+        shared_requests=8,
+    )
+    ok_agree = (
+        fresh_paged["agreement"]["bitwise_identical"]
+        and fresh_paged["shared_prefix"]["bitwise_identical"]
+    )
+    ratio = fresh_paged["shared_prefix"]["admitted_concurrency_ratio"]
+    print(
+        f"[{'ok  ' if ok_agree else 'FAIL'}] paged bitwise agreement; "
+        f"[{'ok  ' if ratio >= 1.5 else 'FAIL'}] shared-prefix "
+        f"concurrency {ratio:.2f}x (floor 1.5x)"
+    )
+    if not ok_agree:
+        failures.append("paged bitwise agreement")
+    if ratio < 1.5:
+        failures.append("paged shared-prefix concurrency")
 
     if args.full:
         fresh_sweep = perf_compare.bench_network_sweep()

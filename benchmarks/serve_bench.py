@@ -1,6 +1,6 @@
 """Serve benchmarks: scheduling, attention substrate, and decode scaling.
 
-Three phases, emitted together as BENCH_serve.json:
+Phases, emitted together as BENCH_serve.json:
 
   * **continuous vs static** batching on a mixed-length synthetic workload
     at EQUAL slots — pure scheduling (both engines run the same jitted
@@ -13,6 +13,14 @@ Three phases, emitted together as BENCH_serve.json:
   * **decode-step latency scaling**: per-step decode latency at several
     cache fill levels and slot occupancies — flash-decoding step time must
     track the *live* length, not ``max_len``.
+  * **paged vs contiguous KV layout**: (a) an agreement A/B at equal slots
+    and equal pool — the paged engine must emit bitwise-identical tokens
+    to the contiguous oracle (decode split pinned to the block size); (b)
+    a shared-system-prompt workload at EQUAL KV HBM — the paged pool
+    (refcounted blocks + prefix aliasing) must admit >= 1.5x the
+    concurrent requests, flattening the queue-dominated TTFT tail (the
+    paper's §6.3 over-provisioning argument: contiguous reserves
+    ``max_len`` per slot, paged capacity tracks live tokens).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--requests N] [--out F]
 
@@ -101,6 +109,163 @@ def _paired_ab(run_a, run_b, mk_requests, repeats: int):
         if best_b is None or b["tokens_per_s"] > best_b["tokens_per_s"]:
             best_b = b
     return best_a, best_b, sorted(ratios)[len(ratios) // 2]
+
+
+# ---------------------------------------------------------- paged KV phase
+
+
+def make_shared_prefix_workload(
+    vocab: int,
+    n: int,
+    prefix_len: int,
+    seed: int,
+    id_base: int = 0,
+    suffix_len: int = 8,
+    max_new: int = 16,
+):
+    """N requests over one shared ``prefix_len``-token system prompt plus a
+    short unique suffix — the million-user serving shape prefix sharing
+    exists for."""
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, prefix_len).astype(np.int32)
+    return [
+        Request(
+            prompt=np.concatenate(
+                [prefix, rng.integers(0, vocab, suffix_len).astype(np.int32)]
+            ),
+            max_new_tokens=max_new,
+            request_id=id_base + i,
+        )
+        for i in range(n)
+    ]
+
+
+def bench_paged(
+    cfg,
+    params,
+    slots: int,
+    seed: int,
+    n_requests: int,
+    block_size: int = 16,
+    shared_max_len: int = 576,
+    shared_prefix: int = 512,
+    shared_requests: int = 16,
+    sched_factor: int = 4,
+) -> dict:
+    """Paged-vs-contiguous phases.
+
+    **agreement**: equal slots, equal pool capacity, the contiguous decode
+    split pinned to ``block_size`` — every generated token must be bitwise
+    identical (the differential-oracle contract the fuzz suite enforces,
+    re-proven on bench traffic).
+
+    **shared_prefix**: equal KV HBM.  The contiguous engine gets ``slots``
+    rings of ``shared_max_len``; the paged engine gets the SAME byte
+    budget as a block pool (``slots * shared_max_len / block_size``
+    blocks) and ``sched_factor * slots`` scheduling slots.  Because the
+    512-token system prompt is aliased across requests and decode blocks
+    are allocated for live tokens only, the paged engine admits several
+    times more concurrent requests in one wave, flattening the TTFT tail
+    (contiguous staggers admissions ``slots`` at a time, so late requests
+    queue behind whole decode generations)."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    # --- agreement at equal capacity -------------------------------------
+    mk = lambda i: make_workload(cfg.vocab, n_requests, seed, id_base=i)
+    cont = Engine(
+        cfg,
+        params,
+        ServeConfig(
+            batch=slots,
+            max_len=64,
+            seed=seed,
+            prefill_bucket=16,
+            decode_block=block_size,
+        ),
+    )
+    paged = Engine(
+        cfg,
+        params,
+        ServeConfig(
+            batch=slots,
+            max_len=64,
+            seed=seed,
+            prefill_bucket=16,
+            kv_layout="paged",
+            block_size=block_size,
+        ),
+    )
+    cont.run(mk(50_000))  # warm both
+    paged.run(mk(50_000))
+    a = _drive(lambda rs, cb: cont.run(rs, on_token=cb), mk(0))
+    b = _drive(lambda rs, cb: paged.run(rs, on_token=cb), mk(0))
+    agree = a.pop("outputs") == b.pop("outputs")
+    agreement = {
+        "bitwise_identical": agree,
+        "block_size": block_size,
+        "contiguous_tokens_per_s": a["tokens_per_s"],
+        "paged_tokens_per_s": b["tokens_per_s"],
+    }
+
+    # --- shared prefix at equal KV HBM -----------------------------------
+    def shared_run(kv_layout: str):
+        if kv_layout == "paged":
+            scfg = ServeConfig(
+                batch=sched_factor * slots,
+                max_len=shared_max_len,
+                seed=seed,
+                prefill_bucket=16,
+                kv_layout="paged",
+                block_size=block_size,
+                # equal HBM: the pool holds exactly the contiguous
+                # engine's slots * max_len KV positions (+ sink block)
+                num_blocks=slots * shared_max_len // block_size + 1,
+            )
+        else:
+            scfg = ServeConfig(
+                batch=slots,
+                max_len=shared_max_len,
+                seed=seed,
+                prefill_bucket=16,
+                decode_block=block_size,
+            )
+        eng = Engine(cfg, params, scfg)
+        eng.run(
+            make_shared_prefix_workload(
+                cfg.vocab, shared_requests, shared_prefix, seed, id_base=60_000
+            )
+        )  # warm every shape
+        eng.stats["peak_active"] = 0
+        reqs = make_shared_prefix_workload(
+            cfg.vocab, shared_requests, shared_prefix, seed
+        )
+        res = _drive(lambda rs, cb: eng.run(rs, on_token=cb), reqs)
+        return {
+            "peak_concurrent": eng.stats["peak_active"],
+            "tokens_per_s": res["tokens_per_s"],
+            "ttft_p50_ms": res["ttft_p50_ms"],
+            "ttft_p95_ms": res["ttft_p95_ms"],
+            "outputs": res.pop("outputs"),
+        }
+
+    sc = shared_run("contiguous")
+    sp = shared_run("paged")
+    shared_agree = sc.pop("outputs") == sp.pop("outputs")
+    conc_ratio = sp["peak_concurrent"] / max(1, sc["peak_concurrent"])
+    shared = {
+        "requests": shared_requests,
+        "prefix_len": shared_prefix,
+        "max_len": shared_max_len,
+        "kv_hbm_token_budget": slots * shared_max_len,
+        "contiguous": sc,
+        "paged": sp,
+        "bitwise_identical": shared_agree,
+        "admitted_concurrency_ratio": conc_ratio,
+        "ttft_p95_speedup": sc["ttft_p95_ms"] / max(1e-9, sp["ttft_p95_ms"]),
+    }
+    return {"agreement": agreement, "shared_prefix": shared}
 
 
 # ------------------------------------------------- decode-step scaling phase
@@ -226,6 +391,7 @@ def run(
     out_path: str | None = "BENCH_serve.json",
     scaling: bool = True,
     ab: bool = True,
+    paged: bool = True,
     # serving-sized cache for the substrate A/B: at the smoke models' tiny
     # dims the decode step is fixed-overhead dominated, so the oracle's
     # max_len scan only becomes visible at a real cache extent
@@ -339,6 +505,8 @@ def run(
             "oracle": ab_res["xla"],
             "flash_vs_oracle_speedup": ab_ratio,
         }
+    if paged:
+        result["paged"] = bench_paged(cfg, params, slots, seed, n_requests)
     if scaling:
         result["decode_step_scaling"] = bench_decode_scaling(
             cfg, params, slots, ab_max_len, seed
@@ -356,6 +524,18 @@ def run(
             f"{result['attention_ab']['flash_vs_oracle_speedup']:.2f}x"
         )
     print(line)
+    if paged:
+        sh = result["paged"]["shared_prefix"]
+        bitwise = result["paged"]["agreement"]["bitwise_identical"]
+        print(
+            f"paged: agreement bitwise={bitwise} | "
+            f"shared-prefix @ equal HBM: concurrency "
+            f"{sh['paged']['peak_concurrent']} vs "
+            f"{sh['contiguous']['peak_concurrent']} "
+            f"({sh['admitted_concurrency_ratio']:.2f}x), "
+            f"ttft p95 {sh['paged']['ttft_p95_ms']:.0f}ms vs "
+            f"{sh['contiguous']['ttft_p95_ms']:.0f}ms"
+        )
     if scaling:
         sc = result["decode_step_scaling"]
         print(
@@ -393,6 +573,11 @@ def main():
         action="store_true",
         help="skip the decode-step scaling phase",
     )
+    ap.add_argument(
+        "--no-paged",
+        action="store_true",
+        help="skip the paged-vs-contiguous KV layout phase",
+    )
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     run(
@@ -404,6 +589,7 @@ def main():
         repeats=args.repeats,
         out_path=args.out,
         scaling=not args.no_scaling,
+        paged=not args.no_paged,
     )
 
 

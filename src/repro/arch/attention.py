@@ -197,6 +197,7 @@ def attend(
     causal_skip: bool = False,
     decode_lengths: jax.Array | None = None,
     decode_impl: str | None = None,
+    decode_block: int | None = None,
 ) -> jax.Array:
     """Dispatch dense vs blockwise by live-score size — or, for cached
     single-token decode, the ragged flash-decoding kernel.
@@ -213,12 +214,16 @@ def attend(
     or overwritten-pad slots lie at indices >= ``min(new_len, size)``.
     Callers must NOT pass ``decode_lengths`` when that invariant does not
     hold (layers.multihead_attention gates on it).  The masked dense path
-    below is the differential oracle for the kernel."""
+    below is the differential oracle for the kernel.  ``decode_block``
+    pins the kernel's KV split (None = auto-tuned); the paged serve engine
+    pins the contiguous oracle to its block size so both layouts reduce in
+    the same order (bitwise differential contract)."""
     Tq, Tk = q.shape[1], k.shape[1]
     if decode_lengths is not None and decode_impl == "flash" and Tq == 1:
         from repro.kernels.flash_attention.ops import decode_attention
 
-        return decode_attention(q[:, 0], k, v, decode_lengths)[:, None]
+        return decode_attention(q[:, 0], k, v, decode_lengths,
+                                bk=decode_block)[:, None]
     if Tq * Tk <= dense_threshold:
         return dense_attention(
             q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,

@@ -96,8 +96,14 @@ class prefill_aligned:
 #     (kernels/flash_attention/decode_attention) with per-slot live
 #     lengths instead of the broadcast position mask.  None = the
 #     dense/blockwise oracle path.
+#   * decode_block_override: pin the KV-axis split of ragged decode
+#     attention (the ``bk`` the contiguous twin iterates in).  The paged
+#     serve engine pins the contiguous oracle to its block size so the two
+#     layouts run the *same* online-softmax reduction order — the bitwise
+#     differential contract.  None = auto (`ops._pick_decode_bk`).
 _MATMUL_IMPL: list = [None]
 _ATTENTION_IMPL: list = [None]
+_DECODE_BLOCK: list = [None]
 
 
 class _override:
@@ -123,6 +129,12 @@ def attention_override(impl: str | None) -> _override:
         # caller believes the kernel is active
         raise ValueError(f"attention impl must be None or 'flash': {impl!r}")
     return _override(_ATTENTION_IMPL, impl)
+
+
+def decode_block_override(bk: int | None) -> _override:
+    if bk is not None and (not isinstance(bk, int) or bk < 1):
+        raise ValueError(f"decode block must be a positive int: {bk!r}")
+    return _override(_DECODE_BLOCK, bk)
 
 
 def _mm(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -212,6 +224,47 @@ def multihead_attention(
     kv_len = None
     decode_lengths = None
     attn_impl = _ATTENTION_IMPL[0]
+    if cache is not None and "kpool" in cache:
+        # paged slot cache: this token's K/V scatter through the block
+        # table into the shared pool at (table[row, pos // bs], pos % bs).
+        # The engine guarantees exclusive write ownership of that block
+        # (fresh allocation or copy-on-write before the step), so rows
+        # never collide; evicted rows aim every table entry at the sink
+        # block, whose garbage nothing live reads.
+        if Tq != 1 or kv_x is not None:
+            raise ValueError(
+                "paged KV caches serve single-token decode only; admission "
+                "prefills into a contiguous scratch and packs blocks"
+            )
+        bs = cache["kpool"].shape[1]
+        p_ins = cache["len"]                        # (B,) write positions
+        phys = jnp.take_along_axis(
+            cache["table"], (p_ins // bs)[:, None], axis=1
+        )[:, 0]
+        kpool = cache["kpool"].at[phys, p_ins % bs].set(
+            k[:, 0].astype(cache["kpool"].dtype)
+        )
+        vpool = cache["vpool"].at[phys, p_ins % bs].set(
+            v[:, 0].astype(cache["vpool"].dtype)
+        )
+        new_cache = {
+            "kpool": kpool, "vpool": vpool,
+            "table": cache["table"], "len": p_ins + 1,
+        }
+        from repro.kernels.flash_attention.ops import decode_attention_paged
+
+        g = h // kv
+        ctx = decode_attention_paged(
+            q.reshape(B, kv, g, hd),
+            kpool, vpool, cache["table"], p_ins + 1,
+            # supports_paged admits only all-global configs, so the scanned
+            # per-layer window (traced here) is always the 2^30 sentinel
+            window=None,
+            # "flash" -> backend auto (Pallas on TPU, jnp twin on CPU);
+            # oracle-mode engines pin the exact gather twin
+            impl=None if attn_impl == "flash" else "xla",
+        ).reshape(B, Tq, h * hd)
+        return _mm(ctx, params["wo"]), new_cache
     if cache is not None:
         size = cache["k"].shape[1]
         # per-row insert positions (rows may differ under slot batching)
@@ -256,6 +309,7 @@ def multihead_attention(
         qg, k, v, q_pos=positions, k_pos=k_pos, causal=causal,
         window=window, kv_len=kv_len, causal_skip=skip_ok,
         decode_lengths=decode_lengths, decode_impl=attn_impl,
+        decode_block=_DECODE_BLOCK[0],
     ).reshape(B, Tq, h * hd)
     return _mm(ctx, params["wo"]), new_cache
 

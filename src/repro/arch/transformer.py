@@ -213,8 +213,13 @@ class Model:
             # scanned layers, and passed down as a hint
             ragged = None
             if caches is not None:
-                size = caches["k"].shape[2]
-                ragged = bool((layer_windows(cfg) >= size).all())
+                if "kpool" in caches:
+                    # paged caches exist only for all-global configs
+                    # (kvcache.supports_paged), so the invariant is free
+                    ragged = True
+                else:
+                    size = caches["k"].shape[2]
+                    ragged = bool((layer_windows(cfg) >= size).all())
 
             def body(x, p_c_w):
                 p, c, w = p_c_w

@@ -39,6 +39,23 @@ step time scales with the *live* length, not ``max_len``.  Contributions of
 a fully-masked block are exactly zero (``exp(NEG_INF - m)`` underflows and
 the correction factor is ``exp(0)``), so padding rows to the batch max is
 bitwise-neutral, which keeps batched serving bitwise-equal to solo runs.
+
+Paged variants (:func:`flash_decode_paged_pallas`,
+:func:`decode_attention_paged_xla`): k/v live in a shared **block pool**
+``(num_blocks, block_size, KV, d)`` instead of a dense per-slot axis, and
+each row carries a **block table** ``(B, max_blocks)`` mapping its logical
+block ``j`` to a physical pool block.  The grid stays
+``(batch * kv_heads, kv_splits)`` with ``kv_splits == max_blocks``; the
+only change is that the k/v index maps go through the table — a second
+scalar-prefetch operand — so block-table *contents* never recompile, and
+dead splits alias to the row's last live **physical** block exactly like
+the dense variant.  Because the KV split boundary is the block boundary,
+the paged recurrence visits the same logical key ranges in the same order
+as the dense kernel at ``bk == block_size``: outputs are bitwise equal,
+which is what lets the contiguous serve engine act as the paged engine's
+differential oracle.  An optional ``window`` additionally masks
+``k_idx <= length - 1 - window`` for sliding-window rows (position ==
+logical index in the paged layout; there is no ring).
 """
 
 from __future__ import annotations
@@ -182,6 +199,167 @@ def decode_attention_xla(
         l = l * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bhgs,bshd->bhgd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return j + 1, m_new, l, acc
+
+    state = (
+        jnp.int32(0),
+        jnp.full((B, KV, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G), jnp.float32),
+        jnp.zeros((B, KV, G, d), jnp.float32),
+    )
+    _, _, l, acc = jax.lax.while_loop(lambda st: st[0] < n_live, body, state)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------ paged variants
+
+
+def _paged_live(k_idx, length, window):
+    """Live-key predicate for paged decode: logical index < length, plus an
+    optional sliding window against the query position ``length - 1``
+    (logical index == absolute position in the paged layout)."""
+    ok = k_idx < length
+    if window is not None:
+        ok &= k_idx > length - 1 - window
+    return ok
+
+
+def _paged_decode_kernel(
+    lens_ref,                     # SMEM (B,) int32 scalar-prefetch
+    table_ref,                    # SMEM (B, n_blk) int32 scalar-prefetch
+    q_ref,                        # (1, G, d)
+    k_ref,                        # (1, bs, 1, d) one physical pool block
+    v_ref,                        # (1, bs, 1, d)
+    o_ref,                        # (1, G, d)
+    m_ref, l_ref, acc_ref,        # VMEM scratch: (G,), (G,), (G, d) fp32
+    *, kv_heads: int, bs: int, n_blk: int, scale: float, window: int | None,
+):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    length = lens_ref[bh // kv_heads]
+
+    @pl.when(j == 0)
+    def _init():
+        reset_carry(m_ref, l_ref, acc_ref)
+
+    @pl.when(j * bs < length)
+    def _live():
+        q = q_ref[0]                      # (G, d)
+        k = k_ref[0, :, 0, :]             # (bs, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                         # (G, bs)
+        k_idx = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(_paged_live(k_idx, length, window), s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_blk - 1)
+    def _store():
+        finalize_out(o_ref, l_ref, acc_ref)
+
+
+def flash_decode_paged_pallas(
+    q: jax.Array,         # (B, KV, G, d) one query token per (row, head)
+    kpool: jax.Array,     # (num_blocks, bs, KV, d) shared block pool
+    vpool: jax.Array,     # (num_blocks, bs, KV, d)
+    tables: jax.Array,    # (B, n_blk) int32 logical -> physical block
+    lengths: jax.Array,   # (B,) int32 live tokens per row (traced)
+    *,
+    window: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KV, G, d = q.shape
+    bs = kpool.shape[1]
+    n_blk = tables.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    lengths = jnp.clip(lengths.astype(jnp.int32), 1, n_blk * bs)
+    tables = tables.astype(jnp.int32)
+
+    def kv_block(bh, j, lens, tabs):
+        b = bh // KV
+        last = last_live_block(lens[b], bs)
+        return (tabs[b, jnp.minimum(j, last)], 0, bh % KV, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KV, n_blk),
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda bh, j, lens, tabs: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), kv_block),
+            pl.BlockSpec((1, bs, 1, d), kv_block),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda bh, j, lens, tabs: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _paged_decode_kernel,
+        kv_heads=KV, bs=bs, n_blk=n_blk, scale=scale, window=window,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, d), q.dtype),
+        interpret=interpret,
+    )(lengths, tables, q.reshape(B * KV, G, d), kpool, vpool)
+    return out.reshape(B, KV, G, d)
+
+
+def decode_attention_paged_xla(
+    q: jax.Array,         # (B, KV, G, d)
+    kpool: jax.Array,     # (num_blocks, bs, KV, d)
+    vpool: jax.Array,     # (num_blocks, bs, KV, d)
+    tables: jax.Array,    # (B, n_blk) int32
+    lengths: jax.Array,   # (B,) int32
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Gather-based jnp twin of the paged kernel: the same blocked
+    recurrence as :func:`decode_attention_xla` with the KV block fetched
+    through the block table (one ``(B,)`` gather per live split) instead of
+    a dynamic slice.  At ``bk == block_size`` the two twins are bitwise
+    equal on equal logical contents — the paged serve engine's differential
+    oracle rests on this."""
+    B, KV, G, d = q.shape
+    bs = kpool.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    lengths = jnp.clip(lengths.astype(jnp.int32), 1, tables.shape[1] * bs)
+    tables = tables.astype(jnp.int32)
+    n_live = jnp.max((lengths + bs - 1) // bs)
+
+    def body(state):
+        j, m, l, acc = state
+        phys = jax.lax.dynamic_slice_in_dim(tables, j, 1, axis=1)[:, 0]
+        kb = jnp.take(kpool, phys, axis=0)              # (B, bs, KV, d)
+        vb = jnp.take(vpool, phys, axis=0)
+        s = jnp.einsum(
+            "bhgd,bshd->bhgs", q, kb, preferred_element_type=jnp.float32
+        ) * scale                                       # (B, KV, G, bs)
+        k_idx = j * bs + jnp.arange(bs, dtype=jnp.int32)
+        live = _paged_live(k_idx[None, :], lengths[:, None], window)
+        s = jnp.where(live[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgs,bshd->bhgd", p.astype(vpool.dtype), vb,
             preferred_element_type=jnp.float32,
         )
         return j + 1, m_new, l, acc

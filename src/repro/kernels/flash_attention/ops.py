@@ -28,7 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.decode_attention import (
+    decode_attention_paged_xla,
     decode_attention_xla,
+    flash_decode_paged_pallas,
     flash_decode_pallas,
 )
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
@@ -186,7 +188,53 @@ def decode_attention(
     if impl == "xla":
         return decode_attention_xla(q, k, v, lengths, bk=bk_)
     interp = _should_interpret() if interpret is None else interpret
-    Gp = G if interp else -(-G // 8) * 8  # sublane-align q rows on TPU
+    return _run_decode_kernel(
+        q,
+        lambda qp: flash_decode_pallas(qp, k, v, lengths, bk=bk_, interpret=interp),
+        interp,
+    )
+
+
+def _run_decode_kernel(q, kern, interp: bool):
+    """Shared decode-kernel epilogue: sublane-align the q group axis on TPU
+    (pad G up to a multiple of 8, slice the pad back off the output)."""
+    G = q.shape[2]
+    Gp = G if interp else -(-G // 8) * 8
     qp = q if Gp == G else jnp.pad(q, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
-    out = flash_decode_pallas(qp, k, v, lengths, bk=bk_, interpret=interp)
+    out = kern(qp)
     return out if Gp == G else out[:, :, :G]
+
+
+def decode_attention_paged(
+    q: jax.Array,         # (B, KV, G, d) one query token per row
+    kpool: jax.Array,     # (num_blocks, bs, KV, d) shared block pool
+    vpool: jax.Array,     # (num_blocks, bs, KV, d)
+    tables: jax.Array,    # (B, n_blk) int32 logical -> physical block
+    lengths: jax.Array,   # (B,) int32 live tokens per row (traced)
+    *,
+    window: int | None = None,
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Block-table-indirect ragged flash-decoding; returns (B, KV, G, d).
+
+    The KV split size is the pool's block size (splits are physical
+    blocks), so there is no ``bk`` knob: the logical reduction order is
+    fixed by the paged layout, which is what makes this path bitwise
+    comparable to the contiguous twin at ``bk == block_size``.  ``impl``
+    dispatches exactly like :func:`decode_attention`."""
+    B, KV, G, d = q.shape
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return decode_attention_paged_xla(
+            q, kpool, vpool, tables, lengths, window=window
+        )
+    interp = _should_interpret() if interpret is None else interpret
+    return _run_decode_kernel(
+        q,
+        lambda qp: flash_decode_paged_pallas(
+            qp, kpool, vpool, tables, lengths, window=window, interpret=interp
+        ),
+        interp,
+    )

@@ -52,3 +52,35 @@ def decode_attention_ref(
     return jnp.einsum(
         "bhgs,bshd->bhgd", p.astype(v.dtype), v
     ).astype(q.dtype)
+
+
+def decode_attention_paged_ref(
+    q: jax.Array,        # (B, KV, G, d)
+    kpool: jax.Array,    # (num_blocks, bs, KV, d)
+    vpool: jax.Array,    # (num_blocks, bs, KV, d)
+    tables: jax.Array,   # (B, n_blk) int32
+    lengths: jax.Array,  # (B,) int32
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Dense oracle for paged decode: materialize each row's logical KV
+    sequence by gathering its block-table chain out of the pool, then run
+    the dense masked softmax (optionally sliding-window; logical index ==
+    absolute position in the paged layout)."""
+    B = q.shape[0]
+    bs = kpool.shape[1]
+    n_blk = tables.shape[1]
+    # (B, n_blk, bs, KV, d) -> (B, S, KV, d) dense per-row sequences
+    k = jnp.take(kpool, tables, axis=0).reshape(B, n_blk * bs, *kpool.shape[2:])
+    v = jnp.take(vpool, tables, axis=0).reshape(B, n_blk * bs, *vpool.shape[2:])
+    d = q.shape[-1]
+    s = jnp.einsum("bhgd,bshd->bhgs", q, k).astype(jnp.float32) / math.sqrt(d)
+    k_idx = jnp.arange(k.shape[1])[None, :]
+    live = k_idx < lengths[:, None]                             # (B, S)
+    if window is not None:
+        live &= k_idx > (lengths[:, None] - 1 - window)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v.dtype), v
+    ).astype(q.dtype)

@@ -47,6 +47,28 @@ def main():
     ap.add_argument("--attention", choices=("flash", "xla"), default="flash",
                     help="decode-attention substrate: ragged flash-decoding "
                          "or the masked dense/blockwise oracle")
+    ap.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="KV cache layout (ServeConfig.kv_layout): "
+                         "'contiguous' reserves slots x max_len positions "
+                         "per layer; 'paged' carves the same HBM into "
+                         "refcounted fixed-size blocks with per-request "
+                         "block tables, so capacity tracks live tokens, "
+                         "prompts sharing a prefix alias physical blocks "
+                         "(copy-on-write), and --slots becomes a pure "
+                         "scheduling cap.  Requires all-global attention; "
+                         "the contiguous layout is the paged engine's "
+                         "bitwise differential oracle")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: tokens per physical KV block "
+                         "(max-len must be a multiple)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged: pool blocks per layer incl. the sink "
+                         "(default: the contiguous footprint, "
+                         "slots*max_len/block_size + 1)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="paged: disable the radix prefix index "
+                         "(every request gets private blocks)")
     ap.add_argument("--static", action="store_true",
                     help="run the padded static-batch baseline instead")
     args = ap.parse_args()
@@ -58,7 +80,9 @@ def main():
         batch=args.slots, max_len=args.max_len,
         temperature=args.temperature, seed=args.seed,
         prefill_bucket=args.prefill_bucket, matmul=args.matmul,
-        attention=args.attention,
+        attention=args.attention, kv_layout=args.kv_layout,
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        prefix_sharing=not args.no_prefix_sharing,
     )
     reqs = make_workload(cfg, args.requests, args.new_tokens, args.seed)
 

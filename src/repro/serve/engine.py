@@ -86,6 +86,27 @@ class ServeConfig:
     # the ragged flash-decoding path (per-slot live lengths, KV reads
     # scale with live length); "xla" is the masked dense/blockwise oracle.
     attention: str = "flash"
+    # "contiguous": one (slots, max_len) KV ring per layer — HBM is sized
+    # by the worst case.  "paged": a refcounted block pool + per-row block
+    # tables (serve/kvcache.BlockPool); capacity tracks LIVE tokens,
+    # prompts sharing a prefix alias physical blocks, and `batch` becomes a
+    # scheduling cap instead of a memory cap.  The contiguous layout is the
+    # paged engine's bitwise differential oracle.
+    kv_layout: str = "contiguous"
+    # paged: tokens per physical KV block
+    block_size: int = 16
+    # paged: pool size per layer, INCLUDING the sink block.  None sizes the
+    # pool to the contiguous layout's footprint (batch * max_len tokens)
+    # plus the sink, which is what the equal-HBM benchmarks compare.
+    num_blocks: int | None = None
+    # paged: alias physical blocks across requests sharing a prompt prefix
+    # (radix index + copy-on-write; see serve/kvcache.BlockPool)
+    prefix_sharing: bool = True
+    # pin the contiguous flash-decoding KV split (None = auto-tuned).  The
+    # paged layout always splits at block_size; pinning the contiguous
+    # oracle to the same value makes the two layouts' online-softmax
+    # reductions identical, hence bitwise-comparable.
+    decode_block: int | None = None
 
     def __post_init__(self):
         # silent fallbacks would report oracle numbers as flash (or xla
@@ -96,6 +117,23 @@ class ServeConfig:
             raise ValueError(
                 f"attention must be 'flash' or 'xla': {self.attention!r}"
             )
+        if self.kv_layout not in ("contiguous", "paged"):
+            raise ValueError(
+                f"kv_layout must be 'contiguous' or 'paged': {self.kv_layout!r}"
+            )
+        if self.kv_layout == "paged":
+            if self.block_size < 1:
+                raise ValueError(f"block_size must be >= 1: {self.block_size}")
+            if self.max_len % self.block_size:
+                raise ValueError(
+                    f"max_len {self.max_len} must be a multiple of "
+                    f"block_size {self.block_size}"
+                )
+
+    def resolved_num_blocks(self) -> int:
+        if self.num_blocks is not None:
+            return self.num_blocks
+        return self.batch * self.max_len // self.block_size + 1  # + sink
 
 
 @dataclasses.dataclass
@@ -103,6 +141,17 @@ class _SlotState:
     rid: int
     emitted: int                 # tokens generated so far
     budget: int                  # effective max_new_tokens
+
+
+@dataclasses.dataclass
+class _PagedRow:
+    """Block ownership of one live paged request (host side)."""
+
+    blocks: list[int]            # logical block -> physical, len == total
+    plen: int                    # prompt tokens
+    n_shared_full: int           # leading full blocks aliased via the index
+    tail_shared: bool            # partial prompt tail aliased (CoW pending)
+    cow_dst: int | None          # pre-allocated CoW target for the tail
 
 
 def _pallas_mm(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -128,19 +177,39 @@ class Engine:
         self.scfg = scfg
         self._impl = _pallas_mm if scfg.matmul == "pallas" else None
         self._attn = "flash" if scfg.attention == "flash" else None
+        self._paged = scfg.kv_layout == "paged"
 
-        self.caches = kvcache.build_caches(cfg, scfg.batch, scfg.max_len)
-        self._axes = kvcache.slot_axes(cfg, scfg.max_len)
+        if self._paged:
+            if not kvcache.supports_paged(cfg):
+                raise ValueError(
+                    f"kv_layout='paged' needs all-global attention; "
+                    f"{cfg.name} has ring/recurrent/hybrid caches"
+                )
+            nb = scfg.resolved_num_blocks()
+            self.caches = kvcache.build_paged_caches(
+                cfg, scfg.batch, scfg.max_len, nb, scfg.block_size
+            )
+            self.pool = kvcache.BlockPool(nb, scfg.block_size)
+            self._axes = None
+        else:
+            self.caches = kvcache.build_caches(cfg, scfg.batch, scfg.max_len)
+            self.pool = None
+            self._axes = kvcache.slot_axes(cfg, scfg.max_len)
         self._free: deque[int] = deque(range(scfg.batch))
         self._waiting: deque[tuple[int, np.ndarray, int]] = deque()
         self._slots: dict[int, _SlotState] = {}
+        self._rows: dict[int, _PagedRow] = {}
         self._outputs: dict[int, list[int]] = {}
         self._next_rid = 0
         self._cur_tok = np.zeros((scfg.batch,), np.int32)
+        # scheduling evidence for the iso-memory benches: the peak number
+        # of simultaneously active slots, and total admissions
+        self.stats = {"peak_active": 0, "admitted": 0}
 
         model, impl, axes = self.model, self._impl, self._axes
         attn = self._attn
         max_len = scfg.max_len
+        dblk = scfg.decode_block
         key0 = jax.random.PRNGKey(scfg.seed)
         temp = scfg.temperature
 
@@ -153,7 +222,11 @@ class Engine:
             return jax.random.fold_in(jax.random.fold_in(key0, rid), t)
 
         def decode_fn(params, toks, caches, rids, ts):
-            with L.matmul_override(impl), L.attention_override(attn):
+            with (
+                L.matmul_override(impl),
+                L.attention_override(attn),
+                L.decode_block_override(dblk),
+            ):
                 logits, caches = model.decode_step(params, toks, caches)
             nxt = jax.vmap(lambda lg, r, t: sample_one(lg, req_key(r, t)))(
                 logits, rids, ts
@@ -180,12 +253,40 @@ class Engine:
             )(logits, rids)
             return toks0, big
 
+        def paged_prefill_fn(params, toks, rids, true_lens):
+            """Paged admission, phase 1: prefill into a contiguous scratch
+            (the SAME program shape the contiguous oracle admits through,
+            so first tokens and packed K/V stay bitwise comparable) and
+            sample each request's first token.  Phase 2 packs the scratch
+            into pool blocks row by row (`kvcache.paged_store_row_blocks`),
+            skipping blocks aliased from the prefix index."""
+            n = toks.shape[0]
+            small = kvcache.build_caches(cfg, n, max_len)
+            with L.matmul_override(impl):
+                logits, small = model.prefill(
+                    params, toks, small, last_index=true_lens - 1
+                )
+            toks0 = jax.vmap(
+                lambda lg, r: sample_one(lg, req_key(r, jnp.int32(0)))
+            )(logits, rids)
+            return toks0, {"k": small["k"], "v": small["v"]}
+
         # the KV cache pytree is DONATED: the ring scatter and admission
         # slot_store update the buffers in place instead of copying every
         # KV tensor per step.  The engine immediately rebinds self.caches
         # to the jit output, so the consumed input is never read again.
+        # The paged helpers follow the same contract: pack/set/CoW are
+        # donated scatters into the pool, never pool copies.
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
         self._admit_group = jax.jit(admit_fn, donate_argnums=(2,))
+        self._paged_prefill = jax.jit(paged_prefill_fn)
+        self._pack_row = jax.jit(kvcache.paged_store_row_blocks, donate_argnums=(0,))
+        self._set_row = jax.jit(kvcache.paged_set_row, donate_argnums=(0,))
+        self._cow = jax.jit(kvcache.paged_copy_block, donate_argnums=(0,))
+        if self._paged:
+            self._sink_row = np.zeros((scfg.max_len // scfg.block_size,), np.int32)
+        else:
+            self._sink_row = None
 
     # ---------------------------------------------------------- admission --
     def submit(self, req: Request) -> int:
@@ -201,47 +302,88 @@ class Engine:
         if len(prompt) >= max_len:
             prompt = prompt[-(max_len - 1) :]
         budget = min(int(req.max_new_tokens), max_len - len(prompt))
+        if self._paged:
+            # never let one request outgrow the whole pool: its admission
+            # would wait forever for blocks that can't exist (deadlock),
+            # and silently shrinking the budget would quietly diverge from
+            # the contiguous oracle — reject loudly instead.  With the
+            # default pool sizing (batch * max_len tokens) this can never
+            # trigger: the max_len truncation above already bounds
+            # prompt + budget to max_len <= capacity.
+            cap_tokens = (self.pool.num_blocks - 1) * self.scfg.block_size
+            if len(prompt) + budget > cap_tokens:
+                raise ValueError(
+                    f"request {rid} needs {len(prompt) + budget} KV tokens "
+                    f"but the whole pool holds {cap_tokens}; grow "
+                    f"num_blocks or shorten the request"
+                )
         self._outputs[rid] = []
         if budget > 0 and len(prompt) > 0:
             self._waiting.append((rid, prompt, budget))
         return rid
 
-    def _admit_waiting(self, on_token: TokenCallback | None) -> None:
-        """Backfill every free slot from the queue.  Admissions sharing a
-        prefill length run as ONE fused jitted call (prefill + tail mask +
-        slot scatter + first-token sample); right-padding to
-        ``prefill_bucket`` collapses mixed prompt lengths onto one compiled
-        shape where that is exact (`kvcache.supports_padded_prefill`)."""
+    def _bucket_len(self, plen: int) -> int:
         scfg = self.scfg
         bucket = (
             scfg.prefill_bucket
             if kvcache.supports_padded_prefill(self.cfg)
             else 0
         )
+        lpad = -(-plen // bucket) * bucket if bucket > 0 else plen
+        if lpad > scfg.max_len:
+            lpad = plen  # bucket would overflow the cache: exact length
+        return lpad
+
+    def _activate(self, rid, budget, slot, tok, on_token) -> bool:
+        """Shared first-token bookkeeping; returns True when the request
+        stays active (budget not exhausted at admission)."""
+        self._outputs[rid].append(tok)
+        self._cur_tok[slot] = tok
+        done = budget == 1
+        if on_token is not None:
+            on_token(rid, tok, 0, done)
+        if done:
+            if self._paged:
+                self._evict_paged(slot)
+            self._free.append(slot)
+            return False
+        self._slots[slot] = _SlotState(rid=rid, emitted=1, budget=budget)
+        return True
+
+    @staticmethod
+    def _prompt_batch(lpad: int, items: list) -> tuple:
+        """Right-pad one admission group's prompts into a (n, lpad) token
+        batch plus per-row request ids / true lengths.  Items are the
+        group tuples of either admission path, led by (rid, prompt, ...)."""
+        n = len(items)
+        toks = np.zeros((n, lpad), np.int32)
+        rids = np.empty((n,), np.int32)
+        tlens = np.empty((n,), np.int32)
+        for j, it in enumerate(items):
+            rid, prompt = it[0], it[1]
+            toks[j, : len(prompt)] = prompt
+            rids[j], tlens[j] = rid, len(prompt)
+        return toks, rids, tlens
+
+    def _admit_waiting(self, on_token: TokenCallback | None) -> bool:
+        """Backfill every free slot from the queue.  Admissions sharing a
+        prefill length run as ONE fused jitted call (prefill + tail mask +
+        slot scatter + first-token sample); right-padding to
+        ``prefill_bucket`` collapses mixed prompt lengths onto one compiled
+        shape where that is exact (`kvcache.supports_padded_prefill`).
+        Returns True when anything was admitted."""
+        if self._paged:
+            return self._admit_waiting_paged(on_token)
         groups: dict[int, list[tuple[int, np.ndarray, int, int]]] = {}
-        order: list[int] = []
         while self._free and self._waiting:
             rid, prompt, budget = self._waiting.popleft()
             slot = self._free.popleft()
-            plen = len(prompt)
-            lpad = -(-plen // bucket) * bucket if bucket > 0 else plen
-            if lpad > scfg.max_len:
-                lpad = plen  # bucket would overflow the cache: exact length
-            if lpad not in groups:
-                groups[lpad] = []
-                order.append(lpad)
-            groups[lpad].append((rid, prompt, budget, slot))
+            lpad = self._bucket_len(len(prompt))
+            groups.setdefault(lpad, []).append((rid, prompt, budget, slot))
 
-        for lpad in order:
-            items = groups[lpad]
-            n = len(items)
-            toks = np.zeros((n, lpad), np.int32)
-            slots_ = np.empty((n,), np.int32)
-            rids = np.empty((n,), np.int32)
-            tlens = np.empty((n,), np.int32)
-            for j, (rid, prompt, budget, slot) in enumerate(items):
-                toks[j, : len(prompt)] = prompt
-                slots_[j], rids[j], tlens[j] = slot, rid, len(prompt)
+        for lpad, items in groups.items():
+            toks, rids, tlens = self._prompt_batch(lpad, items)
+            slots_ = np.asarray([it[3] for it in items], np.int32)
             toks0, self.caches = self._admit_group(
                 self.params,
                 jnp.asarray(toks),
@@ -251,17 +393,158 @@ class Engine:
                 jnp.asarray(tlens),
             )
             toks0 = np.asarray(toks0)
+            self.stats["admitted"] += len(items)
             for j, (rid, prompt, budget, slot) in enumerate(items):
-                tok = int(toks0[j])
-                self._outputs[rid].append(tok)
-                self._cur_tok[slot] = tok
-                done = budget == 1
-                if on_token is not None:
-                    on_token(rid, tok, 0, done)
-                if done:
-                    self._free.append(slot)
-                else:
-                    self._slots[slot] = _SlotState(rid=rid, emitted=1, budget=budget)
+                self._activate(rid, budget, slot, int(toks0[j]), on_token)
+        self.stats["peak_active"] = max(self.stats["peak_active"], len(self._slots))
+        return bool(groups)
+
+    # ------------------------------------------------------ paged admission --
+    def _admit_waiting_paged(self, on_token: TokenCallback | None) -> bool:
+        """Paged admission: a request enters when a slot AND enough free
+        blocks are available (strict FIFO — the queue head never gets
+        jumped).  Ownership is committed host-side first (prefix match ->
+        retain aliases, allocate the rest, register this chain), then each
+        prefill group runs as one jitted call and each row's private blocks
+        are packed into the pool."""
+        scfg = self.scfg
+        bs = scfg.block_size
+        n_blk = scfg.max_len // bs
+        groups: dict[int, list[tuple[int, np.ndarray, int, int, _PagedRow]]] = {}
+        while self._free and self._waiting:
+            rid, prompt, budget = self._waiting[0]
+            plen = len(prompt)
+            total = -(-(plen + budget) // bs)
+            shared_full: list[int] = []
+            shared_tail = None
+            if scfg.prefix_sharing:
+                shared_full, shared_tail = self.pool.match_prefix(prompt.tolist())
+            n_shared = len(shared_full) + (1 if shared_tail is not None else 0)
+            cow_needed = shared_tail is not None and budget > 1
+            need = total - n_shared + (1 if cow_needed else 0)
+            if need > self.pool.free_blocks:
+                break  # head-of-line waits for completions to free blocks
+            self._waiting.popleft()
+            slot = self._free.popleft()
+            for b in shared_full:
+                self.pool.retain(b)
+            if shared_tail is not None:
+                self.pool.retain(shared_tail)
+            blocks = list(shared_full)
+            if shared_tail is not None:
+                blocks.append(shared_tail)
+            while len(blocks) < total:
+                blocks.append(self.pool.alloc())
+            # the CoW target is reserved NOW so the first divergent write
+            # can never be starved by admissions racing it to the free list
+            cow_dst = self.pool.alloc() if cow_needed else None
+            if scfg.prefix_sharing:
+                toks = prompt.tolist()
+                n_full = plen // bs
+                prev = -1
+                for i in range(n_full):
+                    self.pool.register(
+                        prev, tuple(toks[i * bs : (i + 1) * bs]), blocks[i]
+                    )
+                    prev = blocks[i]
+                tail = tuple(toks[n_full * bs :])
+                if tail and n_full < total:
+                    self.pool.register(prev, tail, blocks[n_full])
+            row = _PagedRow(
+                blocks=blocks,
+                plen=plen,
+                n_shared_full=len(shared_full),
+                tail_shared=shared_tail is not None,
+                cow_dst=cow_dst,
+            )
+            self._rows[slot] = row
+            lpad = self._bucket_len(plen)
+            groups.setdefault(lpad, []).append((rid, prompt, budget, slot, row))
+
+        for lpad, items in groups.items():
+            toks, rids, tlens = self._prompt_batch(lpad, items)
+            toks0, scratch = self._paged_prefill(
+                self.params,
+                jnp.asarray(toks),
+                jnp.asarray(rids),
+                jnp.asarray(tlens),
+            )
+            toks0 = np.asarray(toks0)
+            self.stats["admitted"] += len(items)
+            for j, (rid, prompt, budget, slot, row) in enumerate(items):
+                table_row = np.full((n_blk,), kvcache.SINK_BLOCK, np.int32)
+                table_row[: len(row.blocks)] = row.blocks
+                self.caches = self._set_row(
+                    self.caches,
+                    jnp.int32(slot),
+                    jnp.asarray(table_row),
+                    jnp.int32(row.plen),
+                )
+                n_prompt = -(-row.plen // bs)
+                start = row.n_shared_full
+                n_pack = n_prompt - start - (1 if row.tail_shared else 0)
+                if n_pack > 0:
+                    self.caches = self._pack_row(
+                        self.caches,
+                        scratch,
+                        jnp.int32(j),
+                        jnp.int32(start),
+                        jnp.asarray(row.blocks[start : start + n_pack], jnp.int32),
+                    )
+                self._activate(rid, budget, slot, int(toks0[j]), on_token)
+        self.stats["peak_active"] = max(self.stats["peak_active"], len(self._slots))
+        return bool(groups)
+
+    def _resolve_cow(self) -> None:
+        """Before rows write: give every slot still aliasing a shared
+        prompt-tail block its pre-reserved private copy (first divergent
+        write is about to land at ``plen``, inside that block)."""
+        for slot in sorted(self._slots):
+            row = self._rows.get(slot)
+            if row is None or row.cow_dst is None:
+                continue
+            lb = row.plen // self.scfg.block_size
+            src = row.blocks[lb]
+            self.caches = self._cow(
+                self.caches,
+                jnp.int32(slot),
+                jnp.int32(lb),
+                jnp.int32(src),
+                jnp.int32(row.cow_dst),
+            )
+            self.pool.release(src)
+            row.blocks[lb] = row.cow_dst
+            row.cow_dst = None
+            row.tail_shared = False
+
+    def _evict_paged(self, slot: int) -> None:
+        """Release a finished row: repoint its device table at the sink
+        (the always-full-batch decode keeps writing through dead rows, and
+        these blocks are about to be reused) and return every owned block
+        to the pool."""
+        row = self._rows.pop(slot)
+        self.caches = self._set_row(
+            self.caches,
+            jnp.int32(slot),
+            jnp.asarray(self._sink_row),
+            jnp.int32(0),
+        )
+        for b in row.blocks:
+            self.pool.release(b)
+        if row.cow_dst is not None:
+            self.pool.release(row.cow_dst)
+
+    def live_block_refs(self) -> dict[int, int]:
+        """Physical block -> reference count implied by live rows (the
+        ground truth the pool's refcounts must mirror; used by the fuzz
+        suite's invariant checks)."""
+        refs: dict[int, int] = {}
+        for row in self._rows.values():
+            for b in row.blocks:
+                refs[b] = refs.get(b, 0) + 1
+            if row.cow_dst is not None:
+                refs[row.cow_dst] = refs.get(row.cow_dst, 0) + 1
+        return refs
 
     # -------------------------------------------------------------- drive --
     def step(self, on_token: TokenCallback | None = None) -> bool:
@@ -269,7 +552,10 @@ class Engine:
         advance every occupied slot by one decode token.  Returns False
         once the engine is idle."""
         while self._free and self._waiting:
-            self._admit_waiting(on_token)
+            if not self._admit_waiting(on_token):
+                break  # paged: head of queue waits for free blocks
+        if self._paged:
+            self._resolve_cow()
         if not self._slots:
             return bool(self._waiting)
 
@@ -301,6 +587,8 @@ class Engine:
                 finished.append(s)
         for s in finished:
             del self._slots[s]
+            if self._paged:
+                self._evict_paged(s)
             self._free.append(s)  # backfilled at the next step
         return True
 
@@ -337,6 +625,10 @@ class StaticEngine:
     measures scheduling, not kernels."""
 
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        if scfg.kv_layout != "contiguous":
+            # silently serving contiguous numbers under a paged config
+            # would corrupt every A/B built on this baseline
+            raise ValueError("StaticEngine serves the contiguous layout only")
         self.cfg = cfg
         self.model = build(cfg)
         self.params = params

@@ -24,6 +24,11 @@ cache starts from zeros, so stale K/V, ``pos`` sentinels and recurrent
 states are all replaced); eviction is free — a dead slot keeps decoding
 garbage that nothing reads, and the next admission overwrites it.
 
+The PAGED layout (``build_paged_caches`` + :class:`BlockPool` + the
+``paged_*`` device ops, below) replaces the contiguous per-slot rings with
+a refcounted block pool, per-row block tables and a radix prefix index —
+see the "paged layout" section further down for the full contract.
+
 Donation contract: the engine donates this whole pytree through its jitted
 decode/admission programs, so every per-step mutation must be expressible
 as an in-place alias of the donated buffers — which is why the primitives
@@ -188,6 +193,273 @@ def mask_prompt_tail(caches: Any, true_len: jax.Array) -> Any:
         return leaf
 
     return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+# ------------------------------------------------------------ paged layout --
+#
+# The contiguous layout above reserves ``slots x max_len`` KV positions per
+# layer — HBM footprint is set by the worst-case sequence (the paper's §6.3
+# over-provisioning, at serve granularity).  The paged layout carves the
+# same HBM into fixed-size blocks:
+#
+#   kpool/vpool: (num_blocks, block_size, kv_heads, head_dim) per layer
+#   table:       (batch, max_len // block_size) int32, logical -> physical
+#   len:         (batch,) int32 live tokens per row
+#
+# Physical block 0 is the SINK: never allocated, evicted rows point every
+# table entry at it so the always-full-batch decode program's garbage
+# writes land somewhere harmless.  Host-side ownership (refcounts, the
+# free list, the prefix index) lives in :class:`BlockPool`; the device
+# pytree is mutated only through the donated pure ops below
+# (`paged_store_row_blocks` / `paged_set_row` / `paged_copy_block`), so the
+# decode loop keeps the PR-4 zero-copy donation contract.
+#
+# Prefix sharing: the pool keys each block by ``(previous physical block,
+# tokens written in it)`` — a radix chain, vLLM-style.  Requests whose
+# prompts share a leading run of full blocks alias those physical blocks
+# (refcount += 1 each).  A partially-filled prompt tail block is shared
+# only on an exact content match, and the *attaching* request copies it on
+# its first divergent write (copy-on-write); the creating request never
+# needs to — appends past the registered fill are masked for every sharer
+# (they read only ``[0, their_len)``), so registered content is immutable
+# by construction.
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """The paged layout stores one uniform KV pool per layer and masks
+    purely by live length, so it requires every layer to be (global)
+    attention: ring buffers (sliding windows), recurrent states and hybrid
+    stacks have no block-table equivalent here.  MoE FFNs are fine — paging
+    only touches the attention KV."""
+    return (
+        cfg.family in ("dense", "moe")
+        and cfg.mixer == "attention"
+        and cfg.sliding_window is None
+        and not cfg.global_every
+    )
+
+
+def build_paged_caches(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    num_blocks: int,
+    block_size: int,
+) -> Any:
+    """Paged decode caches: per-layer block pools stacked over layers, plus
+    per-row block tables / lengths (replicated per layer so the layer scan
+    slices one uniform pytree; the int32 metadata is negligible)."""
+    if not supports_paged(cfg):
+        raise ValueError(f"paged KV layout unsupported for {cfg.name}")
+    if max_len % block_size:
+        raise ValueError(
+            f"max_len {max_len} not a multiple of block_size {block_size}"
+        )
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    sd = jnp.dtype(cfg.dtype)
+    n_blk = max_len // block_size
+    L = cfg.n_layers
+
+    return {
+        "kpool": jnp.zeros((L, num_blocks, block_size, kv, hd), sd),
+        "vpool": jnp.zeros((L, num_blocks, block_size, kv, hd), sd),
+        "table": jnp.zeros((L, batch, n_blk), jnp.int32),
+        "len": jnp.zeros((L, batch), jnp.int32),
+    }
+
+
+def paged_store_row_blocks(
+    caches: Any,
+    scratch: Any,
+    row: jax.Array,
+    start_lb: jax.Array,
+    phys: jax.Array,
+) -> Any:
+    """Pack ``len(phys)`` consecutive logical blocks of a freshly prefilled
+    contiguous scratch cache (leaves ``(L, n, S, kv, hd)``) into the pool
+    blocks ``phys``, starting at logical block ``start_lb`` of scratch row
+    ``row``.  All indices are traced — one compilation serves every
+    admission per distinct block count.  ``caches`` is donated by the
+    engine's jit of this function."""
+    n_pack = phys.shape[0]
+    bs = caches["kpool"].shape[2]
+    L = caches["kpool"].shape[0]
+    kv, hd = caches["kpool"].shape[3:]
+    row = jnp.asarray(row, jnp.int32)
+    start = jnp.asarray(start_lb, jnp.int32) * bs
+
+    def pack(pool, src):
+        blk = jax.lax.dynamic_slice(
+            src,
+            (jnp.int32(0), row, start, jnp.int32(0), jnp.int32(0)),
+            (L, 1, n_pack * bs, kv, hd),
+        )
+        blocks = blk[:, 0].reshape(L, n_pack, bs, kv, hd)
+        # (L, n_pack, bs, kv, hd) scattered at pool[:, phys]
+        return pool.at[:, phys.astype(jnp.int32)].set(blocks.astype(pool.dtype))
+
+    return {
+        "kpool": pack(caches["kpool"], scratch["k"]),
+        "vpool": pack(caches["vpool"], scratch["v"]),
+        "table": caches["table"],
+        "len": caches["len"],
+    }
+
+
+def paged_set_row(
+    caches: Any, row: jax.Array, table_row: jax.Array, length: jax.Array
+) -> Any:
+    """Write one row's full block table + live length (admission fills it,
+    eviction resets it to all-sink / zero).  ``row`` is traced — one
+    compilation serves every slot."""
+    row = jnp.asarray(row, jnp.int32)
+    L = caches["table"].shape[0]
+    tab = jnp.broadcast_to(
+        table_row.astype(jnp.int32)[None, None, :],
+        (L, 1, caches["table"].shape[2]),
+    )
+    table = jax.lax.dynamic_update_slice(
+        caches["table"], tab, (jnp.int32(0), row, jnp.int32(0))
+    )
+    ln = jnp.broadcast_to(jnp.asarray(length, jnp.int32)[None, None], (L, 1))
+    length_ = jax.lax.dynamic_update_slice(caches["len"], ln, (jnp.int32(0), row))
+    return {
+        "kpool": caches["kpool"],
+        "vpool": caches["vpool"],
+        "table": table,
+        "len": length_,
+    }
+
+
+def paged_copy_block(
+    caches: Any, row: jax.Array, lb: jax.Array, src: jax.Array, dst: jax.Array
+) -> Any:
+    """Copy-on-write: duplicate physical block ``src`` into ``dst`` across
+    every layer's pools and repoint row ``row``'s logical block ``lb`` at
+    the private copy."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cow(pool):
+        blk = jnp.take(pool, src, axis=1)  # (L, bs, kv, hd)
+        return jax.lax.dynamic_update_slice_in_dim(pool, blk[:, None], dst, axis=1)
+
+    row = jnp.asarray(row, jnp.int32)
+    lb = jnp.asarray(lb, jnp.int32)
+    table = caches["table"].at[:, row, lb].set(dst)
+    return {
+        "kpool": cow(caches["kpool"]),
+        "vpool": cow(caches["vpool"]),
+        "table": table,
+        "len": caches["len"],
+    }
+
+
+SINK_BLOCK = 0  # physical block 0: garbage target for dead rows, never owned
+
+
+class BlockPool:
+    """Host-side block ownership for the paged KV cache: a free list,
+    per-block refcounts, and the radix-chain prefix index.
+
+    The pool never touches device memory — it decides *which* physical
+    blocks a request may read/write, and the engine turns those decisions
+    into donated device ops.  Invariants (checked by
+    :meth:`assert_invariants` and the fuzz suite):
+
+      * refcount[b] == number of (live request, logical slot) references
+        to b, for every non-sink block; sink refcount is never tracked.
+      * the free list and the referenced set partition ``[1, num_blocks)``.
+      * every prefix-index entry points at a block with refcount >= 1
+        (releasing a block to zero drops its index entries), so an idle
+        pool is fully free — no leak through the index.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one allocatable block + sink")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.refcount = [0] * num_blocks
+        self.free: list[int] = list(range(num_blocks - 1, 0, -1))  # pop() = 1
+        # (prev_physical_block, tokens-in-block) -> physical block.  Full
+        # blocks carry block_size tokens; a prompt tail carries fewer, so
+        # key tuples of different fills never collide.
+        self.index: dict[tuple[int, tuple[int, ...]], int] = {}
+        self._keys_of: dict[int, list] = {}
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self.free)
+
+    def alloc(self) -> int:
+        bid = self.free.pop()
+        assert self.refcount[bid] == 0, bid
+        self.refcount[bid] = 1
+        return bid
+
+    def retain(self, bid: int) -> None:
+        assert self.refcount[bid] > 0, f"retain of unowned block {bid}"
+        self.refcount[bid] += 1
+
+    def release(self, bid: int) -> None:
+        assert self.refcount[bid] > 0, f"release of unowned block {bid}"
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            for key in self._keys_of.pop(bid, ()):
+                if self.index.get(key) == bid:
+                    del self.index[key]
+            self.free.append(bid)
+
+    def register(self, prev: int, tokens: tuple[int, ...], bid: int) -> None:
+        """Expose a block's content to future prefix matches.  First
+        registration wins; identical content admitted later simply fails to
+        register (it already matched or races a live twin)."""
+        key = (prev, tokens)
+        if key not in self.index:
+            self.index[key] = bid
+            self._keys_of.setdefault(bid, []).append(key)
+
+    def match_prefix(self, tokens: list[int]) -> tuple[list[int], int | None]:
+        """Walk the radix chain over the prompt: returns (shared full
+        blocks, shared-tail block or None).  The tail matches only when
+        every full block matched and the partial content is identical."""
+        bs = self.block_size
+        shared: list[int] = []
+        prev = -1
+        n_full = len(tokens) // bs
+        for i in range(n_full):
+            bid = self.index.get((prev, tuple(tokens[i * bs : (i + 1) * bs])))
+            if bid is None:
+                return shared, None
+            shared.append(bid)
+            prev = bid
+        tail = tokens[n_full * bs :]
+        if not tail or len(shared) != n_full:
+            return shared, None
+        return shared, self.index.get((prev, tuple(tail)))
+
+    def assert_invariants(self, live_refs: dict[int, int]) -> None:
+        """``live_refs``: physical block -> reference count derived from
+        the engine's live rows.  Raises on any ownership drift."""
+        for bid in range(1, self.num_blocks):
+            want = live_refs.get(bid, 0)
+            assert self.refcount[bid] == want, (
+                f"block {bid}: refcount {self.refcount[bid]} != live refs {want}"
+            )
+        free_set = set(self.free)
+        assert len(free_set) == len(self.free), "free list has duplicates"
+        assert SINK_BLOCK not in free_set, "sink block leaked into free list"
+        for bid in free_set:
+            assert self.refcount[bid] == 0, f"free block {bid} has refs"
+        owned = {b for b, c in enumerate(self.refcount) if c > 0}
+        assert owned | free_set == set(range(1, self.num_blocks)), (
+            "free list + owned blocks do not partition the pool"
+        )
+        for key, bid in self.index.items():
+            assert self.refcount[bid] > 0, (
+                f"index entry {key} -> {bid} outlives its block"
+            )
 
 
 def supports_padded_prefill(cfg: ModelConfig) -> bool:

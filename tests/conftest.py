@@ -13,3 +13,10 @@ def _isolated_tile_cache(tmp_path_factory):
     if "REPRO_TILE_CACHE" not in os.environ:
         path = tmp_path_factory.mktemp("tile-cache") / "matmul_tiles.json"
         os.environ["REPRO_TILE_CACHE"] = str(path)
+
+
+def fuzz_examples(default: int) -> int:
+    """Example count for the seeded randomized (``fuzz``-marked) suites:
+    ``default`` in CI (fixed seeds keep runs reproducible), cranked locally
+    via ``FUZZ_EXAMPLES=N make test-fuzz``."""
+    return int(os.environ.get("FUZZ_EXAMPLES", default))

@@ -13,9 +13,19 @@ import numpy as np
 import pytest
 
 from repro.arch.attention import dense_attention
-from repro.kernels.flash_attention.decode_attention import decode_attention_xla
-from repro.kernels.flash_attention.ops import decode_attention, flash_attention
-from repro.kernels.flash_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.decode_attention import (
+    decode_attention_paged_xla,
+    decode_attention_xla,
+)
+from repro.kernels.flash_attention.ops import (
+    decode_attention,
+    decode_attention_paged,
+    flash_attention,
+)
+from repro.kernels.flash_attention.ref import (
+    decode_attention_paged_ref,
+    decode_attention_ref,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -153,6 +163,124 @@ def test_decode_matches_engine_mask_sliding_window_ring(new_len):
     )
 
 
+# ------------------------------------------------- paged (block-table) path
+
+
+def _paged_inputs(rng, B, KV, G, d, bs, n_blk, num_blocks, *, alias=False):
+    """Random pool + per-row block tables.  Physical order is shuffled (a
+    row's chain is non-monotonic in pool order) and, with ``alias=True``,
+    rows share leading blocks like prefix-cached requests do."""
+    q = jax.random.normal(KEY, (B, KV, G, d))
+    kpool = jax.random.normal(jax.random.fold_in(KEY, 1), (num_blocks, bs, KV, d))
+    vpool = jax.random.normal(jax.random.fold_in(KEY, 2), (num_blocks, bs, KV, d))
+    if alias:
+        shared = rng.permutation(num_blocks)[: n_blk // 2]
+        tables = np.stack([
+            np.concatenate([
+                shared,
+                rng.permutation(
+                    [b for b in range(num_blocks) if b not in shared]
+                )[: n_blk - len(shared)],
+            ])
+            for _ in range(B)
+        ])
+    else:
+        tables = np.stack(
+            [rng.permutation(num_blocks)[:n_blk] for _ in range(B)]
+        )
+    return q, kpool, vpool, jnp.asarray(tables, jnp.int32)
+
+
+@pytest.mark.parametrize("KV,G", [(1, 1), (1, 4), (2, 2), (3, 1), (2, 4)])
+def test_paged_kernel_gqa_vs_dense_oracle(KV, G):
+    """Random non-monotonic block tables, every GQA grouping: the kernel
+    body (interpret mode) must agree with the gather-then-dense oracle."""
+    B, d, bs, n_blk = 3, 8, 8, 4
+    rng = np.random.default_rng(0)
+    q, kpool, vpool, tables = _paged_inputs(rng, B, KV, G, d, bs, n_blk, 12)
+    lengths = jnp.asarray([3, 17, 32], jnp.int32)
+    want = decode_attention_paged_ref(q, kpool, vpool, tables, lengths)
+    got = decode_attention_paged(
+        q, kpool, vpool, tables, lengths, impl="pallas", interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("window", [None, 3, 8, 21])
+@pytest.mark.parametrize("bs", [4, 8, 16])  # 8 / 4 / 2 kv splits
+def test_paged_kernel_windows_and_splits(window, bs):
+    """Sliding windows x split counts against the dense oracle (logical
+    index == absolute position: the window masks the oldest keys)."""
+    B, KV, G, d = 2, 2, 2, 16
+    n_blk = 32 // bs
+    rng = np.random.default_rng(1)
+    q, kpool, vpool, tables = _paged_inputs(rng, B, KV, G, d, bs, n_blk, 10)
+    lengths = jnp.asarray([5, 29], jnp.int32)
+    want = decode_attention_paged_ref(
+        q, kpool, vpool, tables, lengths, window=window
+    )
+    got = decode_attention_paged(
+        q, kpool, vpool, tables, lengths, window=window,
+        impl="pallas", interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_paged_aliased_prefix_blocks_rows_agree():
+    """Rows aliasing the same leading physical blocks (prefix sharing)
+    read them through their own tables: each row must match the oracle,
+    and rows with identical logical content must agree bitwise."""
+    B, KV, G, d, bs, n_blk = 4, 2, 2, 8, 8, 4
+    rng = np.random.default_rng(2)
+    q, kpool, vpool, tables = _paged_inputs(
+        rng, B, KV, G, d, bs, n_blk, 12, alias=True
+    )
+    # rows 2 and 3: same query, same table, same length -> bitwise twins
+    q = q.at[3].set(q[2])
+    tables = tables.at[3].set(tables[2])
+    lengths = jnp.asarray([7, 25, 13, 13], jnp.int32)
+    want = decode_attention_paged_ref(q, kpool, vpool, tables, lengths)
+    got = decode_attention_paged(
+        q, kpool, vpool, tables, lengths, impl="pallas", interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+    assert np.array_equal(np.asarray(got[2]), np.asarray(got[3]))
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_paged_twin_matches_kernel_and_contiguous(impl):
+    """The gather twin computes the kernel's recurrence, and both equal the
+    contiguous twin bitwise at bk == block_size on the same logical keys —
+    the property the serve engine's paged-vs-contiguous oracle rests on."""
+    B, KV, G, d, bs, n_blk = 3, 2, 2, 16, 8, 4
+    rng = np.random.default_rng(3)
+    q, kpool, vpool, tables = _paged_inputs(rng, B, KV, G, d, bs, n_blk, 16)
+    lengths = jnp.asarray([2, 19, 32], jnp.int32)
+    kw = dict(impl=impl, interpret=(impl == "pallas") or None)
+    got = decode_attention_paged(q, kpool, vpool, tables, lengths, **kw)
+    k_dense = jnp.take(kpool, tables, axis=0).reshape(B, n_blk * bs, KV, d)
+    v_dense = jnp.take(vpool, tables, axis=0).reshape(B, n_blk * bs, KV, d)
+    dense_twin = decode_attention_xla(q, k_dense, v_dense, lengths, bk=bs)
+    if impl == "xla":
+        assert np.array_equal(np.asarray(got), np.asarray(dense_twin))
+        assert np.array_equal(
+            np.asarray(got),
+            np.asarray(
+                decode_attention_paged_xla(q, kpool, vpool, tables, lengths)
+            ),
+        )
+    else:
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(dense_twin), rtol=1e-6, atol=1e-6
+        )
+
+
 # ---------------------------------------------------------- compile economy
 
 
@@ -169,6 +297,32 @@ def test_decode_lengths_do_not_recompile():
     )
     for a, b in [(1, 2), (7, 31), (32, 15)]:
         fn(q, k, v, jnp.asarray([a, b], jnp.int32)).block_until_ready()
+    if hasattr(fn, "_cache_size"):
+        assert fn._cache_size() == 1
+
+
+def test_paged_table_contents_do_not_recompile():
+    """Block tables ride as a scalar-prefetch operand: remapping every
+    logical block to new physical blocks (admission, CoW, eviction churn)
+    must reuse the one compiled program."""
+    B, KV, G, d, bs, n_blk = 2, 1, 2, 8, 8, 4
+    rng = np.random.default_rng(4)
+    q, kpool, vpool, tables = _paged_inputs(rng, B, KV, G, d, bs, n_blk, 12)
+
+    fn = jax.jit(
+        lambda q, kp, vp, t, lens: decode_attention_paged(
+            q, kp, vp, t, lens, impl="pallas", interpret=True
+        )
+    )
+    for seed, (a, b) in [(0, (1, 2)), (1, (7, 31)), (2, (32, 15))]:
+        t = jnp.asarray(
+            np.stack([
+                np.random.default_rng(seed).permutation(12)[:n_blk]
+                for _ in range(B)
+            ]),
+            jnp.int32,
+        )
+        fn(q, kpool, vpool, t, jnp.asarray([a, b], jnp.int32)).block_until_ready()
     if hasattr(fn, "_cache_size"):
         assert fn._cache_size() == 1
 

@@ -1,0 +1,381 @@
+"""Paged KV cache: property-based differential traces + pool invariants.
+
+The contiguous slot engine is the paged engine's *oracle*: with the
+contiguous flash-decoding KV split pinned to the paged block size
+(``ServeConfig.decode_block``), both layouts run the same online-softmax
+reduction over the same logical keys, so every generated token must be
+**bitwise** equal.  The hypothesis-style suites here drive seeded random
+traces of admit/decode/evict/backfill — mixed prompt lengths, shared
+prefixes, tail-sharing CoW, capacity-starved admission — and assert that
+equality plus the block-pool ownership invariants (refcounts mirror live
+rows, free list + owned blocks partition the pool, the prefix index never
+outlives its blocks) after every step.
+
+Seeds are fixed so CI is reproducible; crank the trace count locally with
+``FUZZ_EXAMPLES=N make test-fuzz``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import fuzz_examples
+from repro.arch.model_zoo import build
+from repro.configs.registry import get
+from repro.serve import kvcache
+from repro.serve.engine import Engine, Request, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get("smollm-360m-smoke")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _paged_scfg(bs=16, batch=3, max_len=64, **kw):
+    # bucketed prefill (exact for this all-global smoke model) keeps the
+    # randomized traces from compiling one prefill per distinct length
+    kw.setdefault("prefill_bucket", 16)
+    return ServeConfig(
+        batch=batch, max_len=max_len, kv_layout="paged", block_size=bs, **kw
+    )
+
+
+def _oracle_scfg(bs=16, batch=3, max_len=64, **kw):
+    # the contiguous oracle pins its decode KV split to the paged block
+    # size: identical reduction order => bitwise-comparable outputs
+    kw.setdefault("prefill_bucket", 16)
+    return ServeConfig(
+        batch=batch, max_len=max_len, attention="flash", decode_block=bs, **kw
+    )
+
+
+def _random_workload(rng, cfg, n, max_len, *, share_p=0.5, prefix_pool=3):
+    """Mixed random prompts; ``share_p`` of them extend one of a few shared
+    prefixes (sometimes exactly — exercising tail sharing + CoW)."""
+    prefixes = [
+        rng.integers(0, cfg.vocab, int(rng.integers(8, max_len // 2))).astype(
+            np.int32
+        )
+        for _ in range(prefix_pool)
+    ]
+    reqs = []
+    for i in range(n):
+        if rng.random() < share_p:
+            pre = prefixes[int(rng.integers(len(prefixes)))]
+            extra = int(rng.integers(0, 6))  # 0 => identical prompt
+            prompt = np.concatenate(
+                [pre, rng.integers(0, cfg.vocab, extra).astype(np.int32)]
+            )
+        else:
+            prompt = rng.integers(
+                0, cfg.vocab, int(rng.integers(1, max_len - 8))
+            ).astype(np.int32)
+        reqs.append(
+            Request(
+                prompt[: max_len - 4],
+                max_new_tokens=int(rng.integers(1, 10)),
+                request_id=i,
+            )
+        )
+    return reqs
+
+
+def _check_pool(eng):
+    eng.pool.assert_invariants(eng.live_block_refs())
+
+
+def _check_device_tables(eng):
+    """The device block tables of live rows must mirror the host
+    ownership (`_PagedRow.blocks`), with every entry past the reserved
+    span aimed at the sink."""
+    tables = np.asarray(eng.caches["table"][0])
+    for slot, row in eng._rows.items():
+        want = np.full((tables.shape[1],), kvcache.SINK_BLOCK, np.int32)
+        nb = len(row.blocks)
+        want[:nb] = row.blocks
+        got = tables[slot]
+        # a pending CoW is the one legal divergence: the device row still
+        # aims at the shared tail until _resolve_cow repoints it
+        if row.cow_dst is not None:
+            lb = row.plen // eng.scfg.block_size
+            want[lb] = got[lb]
+        assert np.array_equal(got, want), (slot, got, want)
+
+
+# ---------------------------------------------------- differential traces --
+
+
+@pytest.mark.fuzz
+def test_paged_matches_contiguous_oracle_fuzz(smol):
+    """Randomized traces: paged engine output must be bitwise equal to the
+    contiguous oracle, and the pool must be fully free after drain."""
+    cfg, params = smol
+    for ex in range(fuzz_examples(3)):
+        rng = np.random.default_rng(100 + ex)
+        bs = int(rng.choice([8, 16]))
+        batch = int(rng.integers(2, 5))
+        temp = float(rng.choice([0.0, 0.8]))
+        reqs = _random_workload(rng, cfg, int(rng.integers(6, 12)), 64)
+        kw = dict(bs=bs, batch=batch, temperature=temp, seed=int(ex))
+        outs_c = Engine(cfg, params, _oracle_scfg(**kw)).run(reqs)
+        paged = Engine(cfg, params, _paged_scfg(**kw))
+        outs_p = paged.run(reqs)
+        for i, (c, p) in enumerate(zip(outs_c, outs_p)):
+            assert np.array_equal(c, p), (
+                f"example {ex} request {i}: paged {p.tolist()} != "
+                f"oracle {c.tolist()}"
+            )
+        _check_pool(paged)
+        assert paged.pool.free_blocks == paged.pool.num_blocks - 1, (
+            "pool not fully free after drain"
+        )
+
+
+@pytest.mark.fuzz
+def test_pool_invariants_hold_after_every_step(smol):
+    """Step-granular ownership audit: refcounts, free list, index liveness
+    and the device-table mirror are checked after every engine step of a
+    shared-prefix trace."""
+    cfg, params = smol
+    rng = np.random.default_rng(7)
+    reqs = _random_workload(rng, cfg, 8, 64, share_p=0.7)
+    eng = Engine(cfg, params, _paged_scfg(batch=3))
+    for r in reqs:
+        eng.submit(r)
+    _check_pool(eng)
+    steps = 0
+    while eng.step():
+        _check_pool(eng)
+        _check_device_tables(eng)
+        steps += 1
+        assert steps < 500, "engine failed to drain"
+    _check_pool(eng)
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+
+def test_blocks_not_slots_gate_admission(smol):
+    """A block-starved pool stalls admission (strict FIFO) without
+    deadlock or corruption: slots stay idle while blocks are scarce, every
+    request completes, outputs still match the oracle bitwise."""
+    cfg, params = smol
+    rng = np.random.default_rng(11)
+    reqs = [
+        Request(
+            rng.integers(0, cfg.vocab, 20).astype(np.int32),
+            max_new_tokens=8,
+            request_id=i,
+        )
+        for i in range(5)
+    ]
+    # pool of 5 usable blocks @ bs=16 (cap 80 tokens) but 4 slots: at most
+    # two 28-token requests (2 blocks each) can be live at once
+    scfg = _paged_scfg(batch=4, max_len=64, num_blocks=6)
+    paged = Engine(cfg, params, scfg)
+    outs_p = paged.run(reqs)
+    outs_c = Engine(cfg, params, _oracle_scfg(batch=4, max_len=64)).run(reqs)
+    for c, p in zip(outs_c, outs_p):
+        assert np.array_equal(c, p)
+    assert paged.stats["peak_active"] <= 2 < scfg.batch
+    _check_pool(paged)
+    assert paged.pool.free_blocks == 5
+
+
+def test_prefix_sharing_aliases_and_cow(smol):
+    """Concurrent requests over one prompt: full prefix blocks alias in
+    every live table (refcount == #sharers), an exact-prompt twin shares
+    the partial tail block, and its first decode write resolves the
+    pre-reserved copy-on-write block — after which tables diverge."""
+    cfg, params = smol
+    rng = np.random.default_rng(5)
+    pre = rng.integers(0, cfg.vocab, 40).astype(np.int32)  # 2 full + tail 8
+    eng = Engine(cfg, params, _paged_scfg(batch=3, bs=16))
+    eng.submit(Request(pre.copy(), 6, request_id=0))
+    eng.submit(Request(pre.copy(), 6, request_id=1))       # exact twin
+    eng.submit(
+        Request(
+            np.concatenate([pre, rng.integers(0, cfg.vocab, 3).astype(np.int32)]),
+            6,
+            request_id=2,
+        )
+    )
+    # admission only (no decode write yet): peek ownership mid-step by
+    # driving admission through a zero-budget...: use step() once, which
+    # admits AND decodes; so check aliasing from the recorded rows after
+    # the first step — CoW has already resolved for the twin by then.
+    rows_before = None
+
+    class Snap:
+        def __call__(self, rid, tok, idx, done):
+            nonlocal rows_before
+            if rows_before is None:
+                rows_before = {
+                    s: (list(r.blocks), r.tail_shared, r.cow_dst)
+                    for s, r in eng._rows.items()
+                }
+
+    eng.step(on_token=Snap())  # admission snapshot fires at first token
+    blocks = {s: b for s, (b, _, _) in rows_before.items()}
+    tails = {s: t for s, (_, t, _) in rows_before.items()}
+    cows = {s: c for s, (_, _, c) in rows_before.items()}
+    s0, s1, s2 = sorted(blocks)
+    # full prefix blocks aliased by all three
+    assert blocks[s0][:2] == blocks[s1][:2] == blocks[s2][:2]
+    # the exact twin aliased the partial tail too, with a reserved CoW dst
+    assert blocks[s1][2] == blocks[s0][2]
+    assert tails[s1] and cows[s1] is not None
+    # request 2 extends past the tail content: its tail block is private
+    assert blocks[s2][2] != blocks[s0][2]
+    # after the first decode step the twin's CoW resolved: private tail
+    row1 = eng._rows[s1]
+    assert row1.cow_dst is None and not row1.tail_shared
+    assert row1.blocks[2] == cows[s1]
+    assert eng.pool.refcount[blocks[s0][2]] == 1  # back to creator-only
+    _check_pool(eng)
+    while eng.step():
+        pass
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+
+def test_paged_flash_and_xla_substrates_agree(smol):
+    """attention='flash' (backend auto) and attention='xla' (pinned gather
+    twin) are substrate swaps on the paged layout, not semantics changes."""
+    cfg, params = smol
+    rng = np.random.default_rng(13)
+    reqs = _random_workload(rng, cfg, 6, 64)
+    a = Engine(cfg, params, _paged_scfg(attention="flash")).run(reqs)
+    b = Engine(cfg, params, _paged_scfg(attention="xla")).run(reqs)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+def test_oversized_request_rejected(smol):
+    """A request whose worst-case KV footprint exceeds the whole pool can
+    never be admitted: submit must raise instead of deadlocking the queue
+    or silently shrinking the budget (which would diverge from the
+    contiguous oracle)."""
+    cfg, params = smol
+    # 2 usable blocks @ bs=16 -> 32-token capacity
+    eng = Engine(cfg, params, _paged_scfg(batch=2, max_len=64, num_blocks=3))
+    with pytest.raises(ValueError, match="pool"):
+        eng.submit(
+            Request((np.arange(30) % cfg.vocab).astype(np.int32), 10)
+        )
+
+
+def test_paged_rejects_unsupported_families(smol):
+    for arch in ("gemma3-12b-smoke", "rwkv6-1.6b-smoke",
+                 "recurrentgemma-2b-smoke"):
+        cfg = get(arch)
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, None, _paged_scfg())
+
+
+def test_serveconfig_validation():
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServeConfig(kv_layout="ring")
+    with pytest.raises(ValueError, match="multiple"):
+        ServeConfig(kv_layout="paged", max_len=100, block_size=16)
+    scfg = ServeConfig(batch=2, max_len=64, kv_layout="paged", block_size=16)
+    assert scfg.resolved_num_blocks() == 2 * 64 // 16 + 1  # + sink
+
+
+# --------------------------------------------------- block-pool unit tests --
+
+
+def test_block_pool_alloc_release_roundtrip():
+    pool = kvcache.BlockPool(6, 4)
+    a, b = pool.alloc(), pool.alloc()
+    assert a != b and kvcache.SINK_BLOCK not in (a, b)
+    pool.retain(a)
+    pool.release(a)
+    assert pool.refcount[a] == 1
+    pool.release(a)
+    pool.release(b)
+    pool.assert_invariants({})
+    assert pool.free_blocks == 5
+
+
+def test_block_pool_prefix_index_lifecycle():
+    pool = kvcache.BlockPool(8, 4)
+    toks = list(range(10))  # 2 full blocks + tail of 2
+    b0, b1, bt = pool.alloc(), pool.alloc(), pool.alloc()
+    pool.register(-1, tuple(toks[0:4]), b0)
+    pool.register(b0, tuple(toks[4:8]), b1)
+    pool.register(b1, tuple(toks[8:10]), bt)
+    assert pool.match_prefix(toks) == ([b0, b1], bt)
+    assert pool.match_prefix(toks[:8]) == ([b0, b1], None)
+    assert pool.match_prefix(toks[:9]) == ([b0, b1], None)  # tail != exact
+    assert pool.match_prefix(toks[:4] + [99] * 4) == ([b0], None)
+    # releasing a block drops its index entries (and breaks the chain)
+    pool.release(b1)
+    assert pool.match_prefix(toks) == ([b0], None)
+    pool.release(b0)
+    pool.release(bt)
+    pool.assert_invariants({})
+
+
+def test_block_pool_refcount_drift_detected():
+    pool = kvcache.BlockPool(4, 4)
+    bid = pool.alloc()
+    with pytest.raises(AssertionError, match="refcount"):
+        pool.assert_invariants({})  # engine claims nothing owns `bid`
+    pool.release(bid)
+    pool.assert_invariants({})
+
+
+# ------------------------------------------------------- serve-engine fuzz --
+
+
+@pytest.mark.fuzz
+def test_serve_engine_stress_no_leak_deterministic(smol):
+    """Satellite stress fuzz: 200+ requests arriving in seeded random
+    bursts (prefix-sharing waves included), driven through a small paged
+    pool.  Asserts (a) zero block leak once drained, (b) outputs bitwise
+    identical under an arrival-order permutation, (c) the pool buffers are
+    donation-stable across the whole run (no silent reallocation)."""
+    cfg, params = smol
+    n_requests = max(200, 50 * fuzz_examples(4))
+    rng = np.random.default_rng(42)
+    reqs = _random_workload(rng, cfg, n_requests, 64, share_p=0.4)
+
+    def drive(order_seed):
+        order = np.random.default_rng(order_seed).permutation(len(reqs))
+        eng = Engine(
+            cfg, params, _paged_scfg(batch=4, bs=8, temperature=0.6, seed=9)
+        )
+        submitted = 0
+        outs = {}
+        pointers = None
+        pending = list(order)
+        while submitted < len(reqs) or eng._slots or eng._waiting:
+            burst = int(rng.integers(0, 5))
+            for _ in range(min(burst, len(pending))):
+                i = pending.pop(0)
+                eng.submit(reqs[i])
+                submitted += 1
+            progressed = eng.step()
+            if pointers is None and submitted > 4:
+                pointers = sorted(
+                    leaf.unsafe_buffer_pointer()
+                    for name in ("kpool", "vpool")
+                    for leaf in [eng.caches[name]]
+                )
+            if not progressed and submitted == len(reqs):
+                break
+        assert pointers == sorted(
+            leaf.unsafe_buffer_pointer()
+            for name in ("kpool", "vpool")
+            for leaf in [eng.caches[name]]
+        ), "pool buffers were reallocated mid-run (donation broke)"
+        _check_pool(eng)
+        assert eng.pool.free_blocks == eng.pool.num_blocks - 1, "block leak"
+        for r in reqs:
+            outs[r.request_id] = eng.pop_result(r.request_id).tolist()
+        assert eng.stats["admitted"] >= len(reqs)
+        return outs
+
+    a = drive(order_seed=0)
+    b = drive(order_seed=1)  # different arrival order, same requests
+    assert a == b, "outputs depend on arrival order"
