@@ -6,24 +6,36 @@ PY := PYTHONPATH=src python
 # ruff format is adopted incrementally: new code must be format-clean, the
 # pre-lint tree is only `ruff check`ed (see README.md §CI)
 FMT_PATHS := src/repro/serve benchmarks/serve_bench.py \
-             benchmarks/check_regress.py tests/test_serve_engine.py
+             benchmarks/check_regress.py tests/test_serve_engine.py \
+             tests/test_chaos.py
 
-.PHONY: test test-fast test-fuzz lint validate bench bench-mapper \
-        bench-simulate bench-dse bench-serve bench-check
+# acceptance matrix for the chaos suite (make test-chaos); override like
+# CHAOS_EPISODES=1 CHAOS_SEED=<seed> to replay one failing episode
+CHAOS_EPISODES ?= 200
+
+.PHONY: test test-fast test-fuzz test-chaos lint validate bench \
+        bench-mapper bench-simulate bench-dse bench-serve bench-check
 
 # tier-1 verify: the full suite (matches ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
 # skip the multi-minute system/validation tests and the randomized fuzz
-# suites (CI runs those as their own named step; `make test` runs all)
+# and chaos suites (CI runs those as their own named steps; `make test`
+# runs all, with the chaos suite at its small in-suite episode count)
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow and not fuzz"
+	$(PY) -m pytest -x -q -m "not slow and not fuzz and not chaos"
 
 # seeded randomized property suites (paged-KV differential traces, serve
 # fuzz).  Deterministic by default; crank locally with FUZZ_EXAMPLES=N
 test-fuzz:
 	$(PY) -m pytest -q -m fuzz
+
+# seeded fault-injection episode matrix (serve/chaos.py): cancels,
+# deadline storms, forced preemptions, block-pressure spikes, audited
+# after every step against the unfaulted bitwise oracle
+test-chaos:
+	CHAOS_EPISODES=$(CHAOS_EPISODES) $(PY) -m pytest -q -m chaos
 
 lint:
 	ruff check .

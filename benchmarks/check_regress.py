@@ -2,9 +2,12 @@
 
 Re-measures the PR-1 batched-pricing engine, the PR-2 vectorized
 simulator, the PR-3/4 serve engine (continuous-vs-static batching at
-equal slots, solo-bitwise outputs), and the PR-5 paged KV layout
+equal slots, solo-bitwise outputs), the PR-5 paged KV layout
 (bitwise agreement with the contiguous oracle + the iso-memory
-shared-prefix concurrency win) on reduced budgets and compares against
+shared-prefix concurrency win), and the PR-6 request-lifecycle fault
+storm (zero leaked blocks, bitwise-stable survivors, preemptions all
+recovered, survivor ITL p95 within 1.25x of the no-fault baseline)
+on reduced budgets and compares against
 the committed BENCH_mapper.json / BENCH_simulate.json / BENCH_serve.json
 claims:
 
@@ -106,6 +109,35 @@ def main() -> None:
             "committed BENCH_serve.json: shared-prefix paged concurrency "
             "win below the 1.5x floor"
         )
+    # PR 6: the fault-storm phase must show a leak-free, bitwise-stable
+    # engine under cancellation/deadline/preemption fire, and survivors
+    # must not be badly degraded (ITL p95 within 1.25x of the no-fault
+    # baseline — the one timing gate here, measured as a median of paired
+    # back-to-back runs to shed scheduler noise)
+    storm = serve["fault_storm"]
+    if storm["leaked_blocks"] != 0:
+        sys.exit(
+            "committed BENCH_serve.json: fault storm leaked "
+            f"{storm['leaked_blocks']} KV blocks"
+        )
+    if not storm["bitwise_survivors_match_baseline"]:
+        sys.exit(
+            "committed BENCH_serve.json: fault-storm survivors diverged "
+            "from their unfaulted baseline outputs"
+        )
+    if storm["survivor_itl_p95_vs_baseline"] > 1.25:
+        sys.exit(
+            "committed BENCH_serve.json: fault-storm survivor ITL p95 "
+            f"{storm['survivor_itl_p95_vs_baseline']:.2f}x the no-fault "
+            "baseline (ceiling 1.25x)"
+        )
+    if storm["preemptions"] < 1 or storm["recovered"] < storm["preemptions"]:
+        sys.exit(
+            "committed BENCH_serve.json: fault storm must exercise "
+            "preemption and recover every victim "
+            f"(preemptions={storm['preemptions']}, "
+            f"recovered={storm['recovered']})"
+        )
 
     failures = []
 
@@ -137,6 +169,7 @@ def main() -> None:
         scaling=False,
         ab=False,
         paged=False,
+        fault_storm=False,
     )
     if not fresh_serve["solo_outputs_identical"]:
         failures.append("serve solo-bitwise")
@@ -182,6 +215,30 @@ def main() -> None:
         failures.append("paged bitwise agreement")
     if ratio < 1.5:
         failures.append("paged shared-prefix concurrency")
+
+    # PR 6: fresh fault storm on a reduced workload.  Only the exact
+    # invariants are gated here (zero leaked blocks, survivors bitwise
+    # equal to their unfaulted baseline, every preemption recovered) —
+    # the ITL ceiling is a timing claim and is checked against the
+    # committed JSON above, not a noisy shared CI runner.
+    fresh_storm = serve_bench.bench_fault_storm(
+        cfg, params, slots=2, seed=0, n_requests=10, hp_requests=2, repeats=1
+    )
+    storm_ok = (
+        fresh_storm["leaked_blocks"] == 0
+        and fresh_storm["bitwise_survivors_match_baseline"]
+        and fresh_storm["recovered"] == fresh_storm["preemptions"]
+    )
+    print(
+        f"[{'ok  ' if storm_ok else 'FAIL'}] fault storm: "
+        f"leaked={fresh_storm['leaked_blocks']} "
+        f"bitwise={fresh_storm['bitwise_survivors_match_baseline']} "
+        f"preempted={fresh_storm['preemptions']} "
+        f"recovered={fresh_storm['recovered']} "
+        f"statuses={fresh_storm['statuses']}"
+    )
+    if not storm_ok:
+        failures.append("fault-storm invariants")
 
     if args.full:
         fresh_sweep = perf_compare.bench_network_sweep()

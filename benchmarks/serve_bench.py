@@ -268,6 +268,261 @@ def bench_paged(
     return {"agreement": agreement, "shared_prefix": shared}
 
 
+# ------------------------------------------------------- fault-storm phase
+
+
+def _storm_drive(eng, reqs, hp, cancel_ids, burst: int = 3) -> dict:
+    """Drive ``reqs`` through a live engine with incremental submission
+    (``burst`` per step), injecting the fault schedule: ``cancel_ids``
+    are cancelled once active with >= 2 tokens out, and the ``hp``
+    requests land only when every slot is occupied (so their priority has
+    to preempt).  The no-fault baseline uses the SAME loop with empty
+    fault inputs — identical submission dynamics, so the survivor ITL
+    comparison isolates the faults, not the arrival pattern."""
+    from repro.serve.engine import RequestStatus
+
+    stamps: dict[int, list[float]] = {}
+    t0 = time.perf_counter()
+
+    def on_token(rid, tok, idx, done):
+        stamps.setdefault(rid, []).append(time.perf_counter() - t0)
+
+    pending = list(reqs)
+    hp = list(hp)
+    cancel_ids = set(cancel_ids)
+    rids = [r.request_id for r in reqs] + [r.request_id for r in hp]
+    open_preempt: dict[int, float] = {}
+    recoveries: list[tuple[int, float, float]] = []  # (rid, t_gone, t_back)
+    steps = 0
+    while pending or hp or eng._slots or eng._waiting:
+        for _ in range(burst):
+            if pending:
+                eng.submit(pending.pop(0))
+        if hp and not pending and not eng._free:
+            # high occupancy reached: the latecomers arrive all at once
+            for r in hp:
+                eng.submit(r)
+            hp.clear()
+        for rid in sorted(cancel_ids):
+            if (
+                eng.status(rid) == RequestStatus.ACTIVE
+                and len(stamps.get(rid, [])) >= 2
+            ):
+                eng.cancel(rid)
+                cancel_ids.discard(rid)
+        active_before = {
+            r for r in rids if eng.status(r) == RequestStatus.ACTIVE
+        }
+        eng.step(on_token)
+        now = time.perf_counter() - t0
+        for rid in active_before:
+            if (
+                eng.status(rid) == RequestStatus.PREEMPTED
+                and rid not in open_preempt
+            ):
+                open_preempt[rid] = now
+        for rid, t_gone in list(open_preempt.items()):
+            ts = stamps.get(rid, [])
+            if ts and ts[-1] > t_gone:  # first fresh token after recovery
+                recoveries.append((rid, t_gone, ts[-1]))
+                del open_preempt[rid]
+        steps += 1
+        assert steps < 10_000, "fault storm failed to drain"
+    return {
+        "wall_s": time.perf_counter() - t0,
+        "stamps": stamps,
+        "recoveries": recoveries,
+    }
+
+
+def bench_fault_storm(
+    cfg,
+    params,
+    slots: int,
+    seed: int,
+    n_requests: int = 24,
+    block_size: int = 16,
+    max_len: int = 64,
+    cancel_fraction: float = 0.10,
+    deadline_fraction: float = 0.20,
+    hp_requests: int = 3,
+    repeats: int = 3,
+) -> dict:
+    """Request-lifecycle robustness under fire, measured: the mixed
+    workload runs unfaulted (baseline) and through a storm — ~10% of
+    requests cancelled mid-generation, ~20% deadline-bound, and a late
+    wave of high-priority arrivals at full occupancy forcing real
+    preemptions.  Emits leaked-block count (must be zero), preemption
+    recovery latency, survivor throughput/ITL (recovery gaps excluded —
+    they are reported as recovery latency, not inter-token jitter), and
+    whether every survivor's output stayed bitwise equal to its unfaulted
+    baseline run (deterministic sampling makes the two comparable
+    token-for-token).  Timing pairs baseline/storm back-to-back per repeat
+    and reports the median-ratio pair — same rationale as _paired_ab; the
+    invariant fields (statuses, leaks, bitwise) are identical across
+    repeats because the fault schedule is a pure function of the seed."""
+    from repro.serve.engine import Engine, Request, RequestStatus, ServeConfig
+
+    scfg = ServeConfig(
+        batch=slots,
+        max_len=max_len,
+        seed=seed,
+        prefill_bucket=16,
+        kv_layout="paged",
+        block_size=block_size,
+    )
+    eng = Engine(cfg, params, scfg)
+    free0 = eng.pool.free_blocks
+    rng = np.random.default_rng(seed)
+
+    def faulted(reqs, deadline_rng):
+        """Attach the deadline mix and split off the high-priority tail."""
+        body = [
+            Request(
+                r.prompt,
+                r.max_new_tokens,
+                request_id=r.request_id,
+                deadline_steps=(
+                    int(deadline_rng.integers(6, 25))
+                    if deadline_rng.random() < deadline_fraction
+                    else None
+                ),
+            )
+            for r in reqs[:n_requests]
+        ]
+        tail = [
+            Request(
+                r.prompt, r.max_new_tokens, request_id=r.request_id, priority=5
+            )
+            for r in reqs[n_requests:]
+        ]
+        return body, tail
+
+    def pick_cancels(reqs, cancel_rng):
+        # target only deadline-free requests: a target that FAILs its
+        # deadline before reaching two tokens would never get cancelled,
+        # silently thinning the advertised cancel mix
+        pool = [r.request_id for r in reqs if r.deadline_steps is None]
+        n_cancel = min(
+            len(pool), max(1, int(round(cancel_fraction * n_requests)))
+        )
+        return cancel_rng.choice(pool, size=n_cancel, replace=False).tolist()
+
+    base = make_workload(cfg.vocab, n_requests + hp_requests, seed)
+    # warm with a full faulted pass: incremental admission-group shapes AND
+    # the cancel/evict/preempt/replay paths all compile before either timed
+    # pass, so the storm-vs-baseline delta is scheduling, not jit caches
+    warm = make_workload(
+        cfg.vocab, n_requests + hp_requests, seed, id_base=70_000
+    )
+    wbody, wtail = faulted(warm, np.random.default_rng(seed))
+    _storm_drive(
+        eng, wbody, hp=wtail, cancel_ids=pick_cancels(wbody, rng)
+    )
+    for r in warm:
+        eng.pop_result(r.request_id)
+
+    pairs = []
+    for _ in range(repeats):
+        # --- no-fault baseline (same drive loop, zero faults) -------------
+        run0 = _storm_drive(eng, base, hp=[], cancel_ids=[])
+        base_out = {r.request_id: eng.pop_result(r.request_id) for r in base}
+        assert all(
+            o.status == RequestStatus.FINISHED for o in base_out.values()
+        ), "baseline pass must finish everything"
+        base_itl = _latency_stats(run0["stamps"])
+        base_tokens = sum(len(o) for o in base_out.values())
+
+        # --- the storm ----------------------------------------------------
+        storm, hp = faulted(base, np.random.default_rng(seed))
+        cancel_ids = pick_cancels(storm, np.random.default_rng(seed + 1))
+        run1 = _storm_drive(eng, storm, hp=hp, cancel_ids=cancel_ids)
+
+        results = {r.request_id: eng.pop_result(r.request_id) for r in base}
+        leaked = free0 - eng.pool.free_blocks
+        statuses: dict[str, int] = {}
+        for res in results.values():
+            statuses[res.status.value] = statuses.get(res.status.value, 0) + 1
+
+        survivors = [
+            rid
+            for rid, res in results.items()
+            if res.status == RequestStatus.FINISHED
+        ]
+        bitwise = all(
+            results[rid].tolist() == base_out[rid].tolist()
+            for rid in survivors
+        )
+        # survivor ITL: skip gaps straddling that request's own preemption —
+        # the engine was deliberately not running it; that cost is reported
+        # as recovery latency, not inter-token jitter
+        gone_at: dict[int, list[float]] = {}
+        for rid, t_gone, _ in run1["recoveries"]:
+            gone_at.setdefault(rid, []).append(t_gone)
+        itl = []
+        for rid in survivors:
+            ts = run1["stamps"].get(rid, [])
+            for a, b in zip(ts, ts[1:]):
+                if any(a <= t <= b for t in gone_at.get(rid, ())):
+                    continue
+                itl.append(b - a)
+        rec_ms = [
+            (t_back - t_gone) * 1e3 for _, t_gone, t_back in run1["recoveries"]
+        ]
+        surv_tokens = sum(len(results[rid]) for rid in survivors)
+        surv_itl_p95 = _pct(itl, 0.95) * 1e3
+        pairs.append(
+            {
+                "statuses": statuses,
+                "leaked_blocks": leaked,
+                "free_blocks_final": eng.pool.free_blocks,
+                "preemptions": sum(
+                    res.preemptions for res in results.values()
+                ),
+                "recovered": len(run1["recoveries"]),
+                "recovery_latency_p50_ms": _pct(rec_ms, 0.50),
+                "recovery_latency_max_ms": max(rec_ms) if rec_ms else 0.0,
+                "survivors": len(survivors),
+                "survivor_tokens": surv_tokens,
+                "survivor_tokens_per_s": surv_tokens / run1["wall_s"],
+                "survivor_itl_p50_ms": _pct(itl, 0.50) * 1e3,
+                "survivor_itl_p95_ms": surv_itl_p95,
+                "bitwise_survivors_match_baseline": bitwise,
+                "baseline": {
+                    "tokens_per_s": base_tokens / run0["wall_s"],
+                    "itl_p50_ms": base_itl["itl_p50_ms"],
+                    "itl_p95_ms": base_itl["itl_p95_ms"],
+                },
+                "survivor_itl_p95_vs_baseline": surv_itl_p95
+                / max(1e-9, base_itl["itl_p95_ms"]),
+            }
+        )
+
+    by_ratio = sorted(pairs, key=lambda p: p["survivor_itl_p95_vs_baseline"])
+    median = by_ratio[len(by_ratio) // 2]
+    return {
+        "requests": n_requests,
+        "hp_requests": hp_requests,
+        "cancel_fraction": cancel_fraction,
+        "deadline_fraction": deadline_fraction,
+        "repeats": repeats,
+        "free_blocks_initial": free0,
+        # invariants must hold on EVERY pair, not just the reported one
+        "leaked_blocks": max(p["leaked_blocks"] for p in pairs),
+        "bitwise_survivors_match_baseline": all(
+            p["bitwise_survivors_match_baseline"] for p in pairs
+        ),
+        "itl_ratio_runs": [
+            p["survivor_itl_p95_vs_baseline"] for p in pairs
+        ],
+        **{
+            k: median[k]
+            for k in median
+            if k not in ("leaked_blocks", "bitwise_survivors_match_baseline")
+        },
+    }
+
+
 # ------------------------------------------------- decode-step scaling phase
 
 
@@ -392,6 +647,7 @@ def run(
     scaling: bool = True,
     ab: bool = True,
     paged: bool = True,
+    fault_storm: bool = True,
     # serving-sized cache for the substrate A/B: at the smoke models' tiny
     # dims the decode step is fixed-overhead dominated, so the oracle's
     # max_len scan only becomes visible at a real cache extent
@@ -507,6 +763,8 @@ def run(
         }
     if paged:
         result["paged"] = bench_paged(cfg, params, slots, seed, n_requests)
+    if fault_storm:
+        result["fault_storm"] = bench_fault_storm(cfg, params, slots, seed)
     if scaling:
         result["decode_step_scaling"] = bench_decode_scaling(
             cfg, params, slots, ab_max_len, seed
@@ -535,6 +793,18 @@ def run(
             f"({sh['admitted_concurrency_ratio']:.2f}x), "
             f"ttft p95 {sh['paged']['ttft_p95_ms']:.0f}ms vs "
             f"{sh['contiguous']['ttft_p95_ms']:.0f}ms"
+        )
+    if fault_storm:
+        fs = result["fault_storm"]
+        print(
+            f"fault-storm: {fs['statuses']} | leaked_blocks="
+            f"{fs['leaked_blocks']} | preemptions={fs['preemptions']} "
+            f"recovered={fs['recovered']} "
+            f"(p50 {fs['recovery_latency_p50_ms']:.0f}ms) | survivors "
+            f"bitwise={fs['bitwise_survivors_match_baseline']}, "
+            f"itl p95 {fs['survivor_itl_p95_ms']:.1f}ms vs no-fault "
+            f"{fs['baseline']['itl_p95_ms']:.1f}ms "
+            f"({fs['survivor_itl_p95_vs_baseline']:.2f}x)"
         )
     if scaling:
         sc = result["decode_step_scaling"]
@@ -578,6 +848,11 @@ def main():
         action="store_true",
         help="skip the paged-vs-contiguous KV layout phase",
     )
+    ap.add_argument(
+        "--no-fault-storm",
+        action="store_true",
+        help="skip the request-lifecycle fault-storm phase",
+    )
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     run(
@@ -590,6 +865,7 @@ def main():
         out_path=args.out,
         scaling=not args.no_scaling,
         paged=not args.no_paged,
+        fault_storm=not args.no_fault_storm,
     )
 
 

@@ -1,5 +1,6 @@
 """Serving example: streaming requests through the continuous-batching
-engine (slot-based KV cache, prefill/decode interleaving).
+engine (slot-based KV cache, prefill/decode interleaving), including the
+request lifecycle — typed results, mid-flight cancellation, deadlines.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -25,15 +26,31 @@ def main():
                 max_new_tokens=m)
         for n, m in ((5, 8), (12, 16), (3, 4))
     ]
+    # a deadline-bound request: FAILs with its partial output if it cannot
+    # finish within 6 engine steps
+    requests.append(
+        Request(rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                max_new_tokens=24, deadline_steps=6)
+    )
 
     def on_token(rid, tok, idx, done):
         tail = "  <done>" if done else ""
         print(f"  stream req{rid}[{idx}] = {tok}{tail}")
 
-    outs = engine.run(requests, on_token=on_token)
-    for i, out in enumerate(outs):
-        print(f"request {i}: prompt_len={len(requests[i].prompt)} "
-              f"generated={out.tolist()}")
+    rids = [engine.submit(r) for r in requests]
+    engine.step(on_token)
+    engine.step(on_token)
+    # the client for request 1 hung up two steps in: cancel mid-flight —
+    # its slot frees immediately and is backfilled on the next step
+    print(f"cancel req{rids[1]} -> {engine.cancel(rids[1]).value}")
+    while engine.step(on_token):
+        pass
+
+    for i, rid in enumerate(rids):
+        res = engine.pop_result(rid)  # typed: (status, tokens, reason, ...)
+        why = f" ({res.reason})" if res.reason else ""
+        print(f"request {rid}: prompt_len={len(requests[i].prompt)} "
+              f"status={res.status.value}{why} generated={res.tolist()}")
 
 
 if __name__ == "__main__":

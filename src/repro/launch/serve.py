@@ -21,13 +21,16 @@ from repro.configs.registry import get
 from repro.serve.engine import Engine, Request, ServeConfig, StaticEngine
 
 
-def make_workload(cfg, n: int, max_new: int, seed: int = 0) -> list[Request]:
+def make_workload(
+    cfg, n: int, max_new: int, seed: int = 0, deadline: int | None = None
+) -> list[Request]:
     rng = np.random.default_rng(seed)
     return [
         Request(
             rng.integers(0, cfg.vocab, rng.integers(3, 16)).astype(np.int32),
             max_new_tokens=int(rng.integers(max(2, max_new // 4), max_new + 1)),
             request_id=i,
+            deadline_steps=deadline,
         )
         for i in range(n)
     ]
@@ -69,6 +72,17 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="paged: disable the radix prefix index "
                          "(every request gets private blocks)")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="bound the waiting queue: overflow submissions "
+                         "end REJECTED immediately (load shedding); "
+                         "default unbounded")
+    ap.add_argument("--stall-patience", type=int, default=64,
+                    help="consecutive no-progress idle steps before the "
+                         "watchdog sheds the queue head instead of "
+                         "livelocking")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request deadline in engine steps; expired "
+                         "requests end FAILED with their partial output")
     ap.add_argument("--static", action="store_true",
                     help="run the padded static-batch baseline instead")
     args = ap.parse_args()
@@ -83,8 +97,12 @@ def main():
         attention=args.attention, kv_layout=args.kv_layout,
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefix_sharing=not args.no_prefix_sharing,
+        max_waiting=args.max_waiting, stall_patience=args.stall_patience,
     )
-    reqs = make_workload(cfg, args.requests, args.new_tokens, args.seed)
+    reqs = make_workload(
+        cfg, args.requests, args.new_tokens, args.seed,
+        deadline=args.deadline_steps,
+    )
 
     t0 = time.perf_counter()
     stamps: dict[int, list[float]] = {}
@@ -113,8 +131,21 @@ def main():
         f"{dt:.2f}s ({total_new / dt:.1f} tok/s, "
         f"per-token p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms)"
     )
-    for i, o in enumerate(outs):
-        print(f"  req{i}: {o.tolist()}")
+    if args.static:
+        for i, o in enumerate(outs):
+            print(f"  req{i}: {o.tolist()}")
+    else:
+        # continuous results are typed (RequestResult): summarize terminal
+        # statuses so deadline expiry / load shedding is visible at a glance
+        counts: dict[str, int] = {}
+        for o in outs:
+            counts[o.status.value] = counts.get(o.status.value, 0) + 1
+        print("  statuses: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(counts.items())
+        ))
+        for i, o in enumerate(outs):
+            why = f" ({o.reason})" if o.reason else ""
+            print(f"  req{i} [{o.status.value}{why}]: {o.tolist()}")
 
 
 if __name__ == "__main__":

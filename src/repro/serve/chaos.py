@@ -1,0 +1,288 @@
+"""Seeded fault-injection chaos harness for the serve engine.
+
+MAESTRO's data-centric framing (PAPERS.md) treats *reuse* as the invariant
+an accelerator must protect; the paged engine's analogue is block
+ownership — refcounts mirroring live rows, the free list and owned set
+partitioning the pool, the prefix index never outliving its blocks, device
+block tables mirroring host ownership.  This module attacks those
+invariants on purpose: an episode drives a seeded workload through a real
+:class:`~repro.serve.engine.Engine` while injecting deterministic faults
+drawn from the same seed —
+
+  * random **cancels** in every lifecycle state (including double-cancels,
+    which must be idempotent no-ops);
+  * **deadline storms** (a slice of each workload carries tight
+    ``deadline_steps``);
+  * forced **preemptions** of random active requests (exercising the
+    release → requeue → re-prefill → bitwise replay recovery path);
+  * external **block-pressure spikes** (`BlockPool.reserve` withholds free
+    blocks for a few steps, starving admission exactly like a co-tenant
+    would);
+  * **admission stalls** emerging from the above, which the engine's
+    watchdog must shed rather than livelock on.
+
+After EVERY step the harness audits the full ownership story
+(:func:`audit`), and at drain it checks the pool is leak-free and every
+request's tokens agree **bitwise** with an unfaulted oracle run — full
+output for FINISHED requests (preempted-and-recovered ones included), the
+generated prefix for cancelled/expired/shed ones.  Episodes are pure
+functions of ``(engine config, seed)``: a CI failure reproduces locally
+from the seed printed in the assertion.
+
+The oracle can be the contiguous engine with ``decode_block`` pinned to the
+paged block size (the PR-4/5 differential idiom): sampling folds
+``(seed, rid, t)`` — never batch-mates, arrival order, or slot — so the
+unfaulted run is bitwise ground truth for any faulted interleaving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serve import kvcache
+from repro.serve.engine import (
+    TERMINAL_STATUSES,
+    Engine,
+    Request,
+    RequestStatus,
+)
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    """Fault-schedule knobs; every random draw comes from the episode's
+    seeded generator, so the same (config, seed) replays the same chaos."""
+
+    n_requests: int = 10
+    max_new: int = 8              # budgets drawn from [1, max_new]
+    share_p: float = 0.5          # fraction extending a shared prefix
+    p_cancel: float = 0.12        # per-step: cancel one live request
+    p_dead_cancel: float = 0.05   # per-step: re-cancel a terminal request
+    p_preempt: float = 0.12       # per-step: force-preempt one active
+    p_spike: float = 0.08         # per-step: start a block-pressure spike
+    spike_blocks: int = 6         # spike size upper bound
+    spike_steps: int = 5          # spike duration upper bound
+    p_deadline: float = 0.25      # per-request: attach a deadline
+    deadline_lo: int = 2
+    deadline_hi: int = 40
+    p_priority: float = 0.3       # per-request: non-zero priority (1..3)
+    burst_hi: int = 4             # submissions per step upper bound
+    max_steps: int = 1000         # drain bound (fail = livelock)
+
+
+@dataclasses.dataclass
+class EpisodeReport:
+    """What one episode did — aggregated by the test matrix to prove every
+    fault type actually fired across the episode set."""
+
+    seed: int
+    steps: int
+    statuses: dict[str, int]
+    stats: dict[str, int]         # engine lifecycle counters
+
+
+def check_device_tables(eng: Engine) -> None:
+    """Device block tables of live rows must mirror host ownership
+    (`_PagedRow.blocks`), every entry past the reserved span aimed at the
+    sink.  A pending CoW is the one legal divergence: the device row still
+    aims at the shared tail until ``_resolve_cow`` repoints it."""
+    tables = np.asarray(eng.caches["table"][0])
+    for slot, row in eng._rows.items():
+        want = np.full((tables.shape[1],), kvcache.SINK_BLOCK, np.int32)
+        want[: len(row.blocks)] = row.blocks
+        got = tables[slot]
+        if row.cow_dst is not None:
+            lb = row.plen // eng.scfg.block_size
+            want[lb] = got[lb]
+        assert np.array_equal(got, want), (
+            f"slot {slot}: device table {got.tolist()} != host ownership "
+            f"{want.tolist()}"
+        )
+
+
+def audit(eng: Engine) -> None:
+    """Full ownership/status consistency check, cheap enough to run after
+    every step: pool refcounts mirror live rows (external reservations
+    accounted), device tables mirror host tables, and every request id
+    sits exactly where its status says."""
+    if eng.pool is not None:
+        eng.pool.assert_invariants(eng.live_block_refs())
+        check_device_tables(eng)
+    queued = set(eng._waiting)
+    active = {st.rid for st in eng._slots.values()}
+    assert not queued & active, f"rids both queued and active: {queued & active}"
+    for rid, info in eng._reqs.items():
+        if info.status in (RequestStatus.WAITING, RequestStatus.PREEMPTED):
+            assert rid in queued, f"rid {rid} {info.status} but not queued"
+        elif info.status == RequestStatus.ACTIVE:
+            assert rid in active, f"rid {rid} ACTIVE but holds no slot"
+        else:
+            assert info.status in TERMINAL_STATUSES
+            assert rid not in queued and rid not in active, (
+                f"rid {rid} terminal ({info.status}) but still scheduled"
+            )
+
+
+def make_chaos_workload(
+    rng: np.random.Generator, vocab: int, max_len: int, ccfg: ChaosConfig
+) -> list[Request]:
+    """Mixed prompts (a slice sharing prefixes, sometimes exactly — tail
+    sharing + CoW under fire), random budgets, and the fault surface the
+    scheduler has to honor: deadlines on ~p_deadline of them, priorities
+    on ~p_priority."""
+    prefixes = [
+        rng.integers(0, vocab, int(rng.integers(8, max_len // 2))).astype(
+            np.int32
+        )
+        for _ in range(3)
+    ]
+    reqs = []
+    for i in range(ccfg.n_requests):
+        if rng.random() < ccfg.share_p:
+            pre = prefixes[int(rng.integers(len(prefixes)))]
+            extra = int(rng.integers(0, 6))  # 0 => identical prompt
+            prompt = np.concatenate(
+                [pre, rng.integers(0, vocab, extra).astype(np.int32)]
+            )
+        else:
+            prompt = rng.integers(
+                0, vocab, int(rng.integers(1, max_len - 8))
+            ).astype(np.int32)
+        deadline = None
+        if rng.random() < ccfg.p_deadline:
+            deadline = int(rng.integers(ccfg.deadline_lo, ccfg.deadline_hi))
+        priority = (
+            int(rng.integers(1, 4)) if rng.random() < ccfg.p_priority else 0
+        )
+        reqs.append(
+            Request(
+                prompt[: max_len - 4],
+                max_new_tokens=int(rng.integers(1, ccfg.max_new + 1)),
+                request_id=i,
+                priority=priority,
+                deadline_steps=deadline,
+            )
+        )
+    return reqs
+
+
+def oracle_outputs(oracle: Engine, reqs: list[Request]) -> dict[int, list[int]]:
+    """Ground-truth tokens per request: the same workload, stripped of
+    deadlines/priorities (they only change *scheduling*, which sampling is
+    independent of), through an unfaulted engine.  The oracle engine must
+    share seed/temperature/max_len with the faulted one."""
+    bare = [
+        Request(r.prompt, r.max_new_tokens, request_id=r.request_id)
+        for r in reqs
+    ]
+    outs = oracle.run(bare)
+    for r, o in zip(bare, outs):
+        assert o.status == RequestStatus.FINISHED, (
+            f"oracle run must finish everything: rid {r.request_id} "
+            f"ended {o.status}"
+        )
+    return {r.request_id: o.tolist() for r, o in zip(bare, outs)}
+
+
+def run_episode(
+    eng: Engine,
+    oracle: dict[int, list[int]],
+    reqs: list[Request],
+    seed: int,
+    ccfg: ChaosConfig,
+) -> EpisodeReport:
+    """Drive one seeded chaos episode through ``eng`` (reused across
+    episodes — it must enter drained; compiled programs amortize).  Audits
+    ownership after every step, then asserts leak-free drain and bitwise
+    oracle agreement for every request."""
+    assert not eng._reqs and not eng._slots and not eng._waiting, (
+        "chaos episode needs a drained engine"
+    )
+    rng = np.random.default_rng(seed)
+    stats0 = dict(eng.stats)  # engines are reused: report per-episode deltas
+    pending = list(rng.permutation(len(reqs)))
+    spikes: list[tuple[list[int], int]] = []   # (reserved blocks, expiry)
+    steps = 0
+    rids = [r.request_id for r in reqs]
+
+    def live(statuses):
+        return [r for r in rids if eng.status(r) in statuses]
+
+    while pending or eng._slots or eng._waiting:
+        for _ in range(int(rng.integers(0, ccfg.burst_hi + 1))):
+            if pending:
+                eng.submit(reqs[pending.pop(0)])
+        # fault injection — all host-side, between steps, fully seeded
+        if rng.random() < ccfg.p_cancel:
+            victims = live(
+                (
+                    RequestStatus.WAITING,
+                    RequestStatus.ACTIVE,
+                    RequestStatus.PREEMPTED,
+                )
+            )
+            if victims:
+                eng.cancel(victims[int(rng.integers(len(victims)))])
+        if rng.random() < ccfg.p_dead_cancel:
+            dead = live(TERMINAL_STATUSES)
+            if dead:
+                rid = dead[int(rng.integers(len(dead)))]
+                before = eng.status(rid)
+                assert eng.cancel(rid) == before, "double-cancel not idempotent"
+                assert eng.status(rid) == before
+        if rng.random() < ccfg.p_preempt:
+            actives = live((RequestStatus.ACTIVE,))
+            if actives:
+                eng.preempt(actives[int(rng.integers(len(actives)))])
+        if eng.pool is not None and rng.random() < ccfg.p_spike:
+            held = eng.pool.reserve(int(rng.integers(1, ccfg.spike_blocks + 1)))
+            if held:
+                expiry = steps + int(rng.integers(1, ccfg.spike_steps + 1))
+                spikes.append((held, expiry))
+        eng.step()
+        steps += 1
+        for held, expiry in [s for s in spikes if s[1] <= steps]:
+            eng.pool.unreserve(held)
+            spikes.remove((held, expiry))
+        audit(eng)
+        assert steps < ccfg.max_steps, (
+            f"chaos episode seed={seed} failed to drain in {steps} steps "
+            f"(livelock: watchdog/shedding broken?)"
+        )
+    for held, _ in spikes:
+        eng.pool.unreserve(held)
+    audit(eng)
+    if eng.pool is not None:
+        assert eng.pool.free_blocks == eng.pool.num_blocks - 1, (
+            f"chaos episode seed={seed} leaked "
+            f"{eng.pool.num_blocks - 1 - eng.pool.free_blocks} blocks"
+        )
+
+    statuses: dict[str, int] = {}
+    for r in reqs:
+        res = eng.pop_result(r.request_id)
+        statuses[res.status.value] = statuses.get(res.status.value, 0) + 1
+        want = oracle[r.request_id]
+        got = res.tolist()
+        if res.status == RequestStatus.FINISHED:
+            assert got == want, (
+                f"chaos episode seed={seed} rid {r.request_id} "
+                f"(preemptions={res.preemptions}): FINISHED output {got} != "
+                f"oracle {want}"
+            )
+        else:
+            # cancelled / expired / shed mid-flight: whatever was generated
+            # must still be the oracle's prefix, bitwise
+            assert got == want[: len(got)], (
+                f"chaos episode seed={seed} rid {r.request_id} "
+                f"({res.status}): partial output {got} is not a prefix of "
+                f"oracle {want}"
+            )
+    return EpisodeReport(
+        seed=seed,
+        steps=steps,
+        statuses=statuses,
+        stats={k: v - stats0.get(k, 0) for k, v in eng.stats.items()},
+    )

@@ -18,6 +18,41 @@ Sampling keys are derived per request as ``fold_in(fold_in(seed, rid), t)``
 so outputs are bitwise-deterministic for a fixed seed regardless of arrival
 order or slot assignment (slot rows are computationally independent).
 
+Request lifecycle.  Every request moves through a real state machine::
+
+    WAITING -> ACTIVE -> FINISHED
+                 |   \\-> CANCELLED | FAILED        (cancel / deadline)
+                 \\-> PREEMPTED -> WAITING -> ACTIVE  (block/slot pressure)
+    WAITING -> CANCELLED | FAILED | REJECTED       (cancel / deadline / shed)
+
+  * :meth:`Engine.cancel` works in every state — dequeue if waiting,
+    evict-and-release-blocks if active, no-op (idempotent) once terminal.
+  * Per-request **deadlines** (``Request.deadline_steps``) are checked at
+    the top of every :meth:`step`; an expired request is evicted through
+    the same block-release path as cancellation and ends ``FAILED``.
+  * **Preemption**: when the best waiting request outranks an active one
+    and admission is starved (no free slot, or — paged — not enough free
+    blocks), the lowest-priority victim's blocks are released (its table
+    repointed at the sink, exactly the eviction idiom) and it is requeued.
+    On re-admission its prompt is re-prefilled through the radix prefix
+    index (shared-prefix blocks are aliased again) and its already
+    generated tokens are *replayed* through the identical decode programs
+    (teacher-forced, not re-emitted) — decode is deterministic, so the
+    recovered KV state and every subsequent token are **bitwise identical**
+    to the uninterrupted run.  (Replaying beats sampling from a re-prefill
+    of ``prompt + generated``: prefill and decode attention use different
+    softmax reduction orders, so prefill-produced KV/logits for
+    decode-generated positions would not be bitwise-reproducible.)
+  * **Load shedding**: ``ServeConfig.max_waiting`` bounds the queue
+    (overflow submissions end ``REJECTED`` immediately), and a watchdog
+    sheds the head of a queue that makes no admission progress with zero
+    active slots for ``stall_patience`` consecutive steps — the engine
+    degrades by rejecting loudly instead of livelocking.
+
+``serve/chaos.py`` drives all of this under a seeded fault schedule and
+audits the block-pool invariants plus bitwise oracle agreement after every
+step; ``make test-chaos`` runs the episode matrix.
+
 The decode hot loop is memory-shaped (the paper's words-per-MAC argument at
 serve granularity), so both of its memory sins are fixed here:
 
@@ -44,7 +79,9 @@ same ``attention`` setting so the A/B isolates scheduling.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import enum
 from collections import deque
 from typing import Any, Callable
 
@@ -61,12 +98,98 @@ from repro.serve import kvcache
 TokenCallback = Callable[[int, int, int, bool], None]
 
 
+class RequestStatus(str, enum.Enum):
+    """Lifecycle states.  WAITING/ACTIVE/PREEMPTED are live; FINISHED,
+    CANCELLED, FAILED and REJECTED are terminal (all blocks released, the
+    accumulated tokens frozen); UNKNOWN is the answer for ids the engine
+    has never seen (or whose results were already popped)."""
+
+    WAITING = "WAITING"       # queued, not yet admitted
+    ACTIVE = "ACTIVE"         # holds a slot (and, paged, blocks)
+    PREEMPTED = "PREEMPTED"   # evicted mid-generation, requeued for recovery
+    FINISHED = "FINISHED"     # ran to its token budget
+    CANCELLED = "CANCELLED"   # Engine.cancel(); partial tokens kept
+    FAILED = "FAILED"         # deadline expiry (reason says why)
+    REJECTED = "REJECTED"     # load-shed: queue bound or watchdog
+    UNKNOWN = "UNKNOWN"
+
+
+TERMINAL_STATUSES = frozenset(
+    {
+        RequestStatus.FINISHED,
+        RequestStatus.CANCELLED,
+        RequestStatus.FAILED,
+        RequestStatus.REJECTED,
+    }
+)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Typed request outcome: terminal status + the generated tokens.
+
+    Terminal guarantees: FINISHED tokens are the full budget; CANCELLED /
+    FAILED tokens are the prefix generated before eviction (bitwise equal
+    to the same prefix of an unfaulted run); REJECTED generated nothing.
+    Every terminal status implies all slot/block resources were released.
+
+    The raw-array return of :meth:`Engine.pop_result` is deprecated; the
+    array-like surface below (``__array__``/``tolist``/``len``/``shape``)
+    keeps pre-lifecycle callers working unchanged.
+    """
+
+    status: RequestStatus
+    tokens: np.ndarray
+    reason: str = ""
+    preemptions: int = 0
+
+    def __array__(self, dtype=None, copy=None):
+        arr = np.asarray(self.tokens, dtype)
+        return arr.copy() if copy else arr
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    def __iter__(self):
+        return iter(self.tokens)
+
+    def __getitem__(self, i):
+        return self.tokens[i]
+
+    @property
+    def shape(self):
+        return self.tokens.shape
+
+    def tolist(self) -> list[int]:
+        return self.tokens.tolist()
+
+    # elementwise comparisons, so pre-lifecycle range checks like
+    # ``(out >= 0).all()`` keep working on the typed result
+    def __lt__(self, other):
+        return np.asarray(self.tokens) < other
+
+    def __le__(self, other):
+        return np.asarray(self.tokens) <= other
+
+    def __gt__(self, other):
+        return np.asarray(self.tokens) > other
+
+    def __ge__(self, other):
+        return np.asarray(self.tokens) >= other
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 16
     # stable id for deterministic sampling; defaults to submission order
     request_id: int | None = None
+    # higher priority admits first and may preempt strictly-lower-priority
+    # active requests when admission is slot- or block-starved
+    priority: int = 0
+    # engine steps (not wall clock, so chaos/CI replays are deterministic)
+    # the request may participate in before it FAILs; None = no deadline
+    deadline_steps: int | None = None
 
 
 @dataclasses.dataclass
@@ -107,10 +230,20 @@ class ServeConfig:
     # oracle to the same value makes the two layouts' online-softmax
     # reductions identical, hence bitwise-comparable.
     decode_block: int | None = None
+    # bound the waiting queue: a submit that would exceed it is REJECTED
+    # immediately (load shedding) instead of growing the queue without
+    # bound.  None = unbounded.
+    max_waiting: int | None = None
+    # watchdog: consecutive steps with zero active slots and zero admission
+    # progress (while requests wait) before the head of the queue is shed
+    # REJECTED — the engine degrades loudly instead of livelocking on a
+    # pool that will never free (external pressure, accounting bugs).
+    stall_patience: int = 64
 
     def __post_init__(self):
-        # silent fallbacks would report oracle numbers as flash (or xla
-        # GEMMs as pallas) — reject anything outside the known substrates
+        # every mis-setting here used to surface as a downstream shape
+        # error or a silently-wrong A/B — validate eagerly with messages
+        # that say what to change
         if self.matmul not in ("xla", "pallas"):
             raise ValueError(f"matmul must be 'xla' or 'pallas': {self.matmul!r}")
         if self.attention not in ("flash", "xla"):
@@ -121,6 +254,29 @@ class ServeConfig:
             raise ValueError(
                 f"kv_layout must be 'contiguous' or 'paged': {self.kv_layout!r}"
             )
+        if self.batch < 1:
+            raise ValueError(f"batch (KV slot count) must be >= 1: {self.batch}")
+        if self.max_len < 2:
+            raise ValueError(
+                f"max_len must be >= 2 (one prompt token + one generated): "
+                f"{self.max_len}"
+            )
+        if self.prefill_bucket < 0:
+            raise ValueError(
+                f"prefill_bucket must be >= 0 (0 disables bucketing): "
+                f"{self.prefill_bucket}"
+            )
+        if self.max_waiting is not None and self.max_waiting < 1:
+            raise ValueError(
+                f"max_waiting must be >= 1 (or None for unbounded): "
+                f"{self.max_waiting}"
+            )
+        if self.stall_patience < 1:
+            raise ValueError(
+                f"stall_patience must be >= 1 step: {self.stall_patience}"
+            )
+        if self.decode_block is not None and self.decode_block < 1:
+            raise ValueError(f"decode_block must be >= 1: {self.decode_block}")
         if self.kv_layout == "paged":
             if self.block_size < 1:
                 raise ValueError(f"block_size must be >= 1: {self.block_size}")
@@ -129,6 +285,29 @@ class ServeConfig:
                     f"max_len {self.max_len} must be a multiple of "
                     f"block_size {self.block_size}"
                 )
+            if self.num_blocks is not None and self.num_blocks < 2:
+                raise ValueError(
+                    f"num_blocks counts the sink block too, so a usable pool "
+                    f"needs num_blocks >= 2: got {self.num_blocks} (or pass "
+                    f"None to size the pool to the contiguous footprint)"
+                )
+            if (
+                self.decode_block is not None
+                and self.decode_block != self.block_size
+            ):
+                raise ValueError(
+                    f"the paged layout always splits decode attention at "
+                    f"block_size={self.block_size}; decode_block="
+                    f"{self.decode_block} contradicts it — drop decode_block "
+                    f"(it is only for pinning a CONTIGUOUS oracle) or set "
+                    f"them equal"
+                )
+        elif self.num_blocks is not None:
+            raise ValueError(
+                f"num_blocks={self.num_blocks} only applies to "
+                f"kv_layout='paged'; the contiguous layout is sized by "
+                f"batch * max_len"
+            )
 
     def resolved_num_blocks(self) -> int:
         if self.num_blocks is not None:
@@ -137,10 +316,29 @@ class ServeConfig:
 
 
 @dataclasses.dataclass
+class _ReqInfo:
+    """Host-side record of one request, alive from submit to pop_result."""
+
+    rid: int
+    prompt: np.ndarray
+    budget: int                  # effective max_new_tokens
+    priority: int
+    deadline: int | None         # absolute engine step number, or None
+    seq: int                     # arrival order (FIFO tie-break in-priority)
+    status: RequestStatus = RequestStatus.WAITING
+    reason: str = ""
+    preemptions: int = 0
+
+
+@dataclasses.dataclass
 class _SlotState:
     rid: int
-    emitted: int                 # tokens generated so far
+    emitted: int                 # tokens generated so far (this occupancy)
     budget: int                  # effective max_new_tokens
+    # preemption recovery: tokens already recorded before eviction.  While
+    # emitted < replay the decode loop teacher-forces the recorded tokens
+    # (asserting bitwise re-derivation) without re-emitting them.
+    replay: int = 0
 
 
 @dataclasses.dataclass
@@ -196,15 +394,31 @@ class Engine:
             self.pool = None
             self._axes = kvcache.slot_axes(cfg, scfg.max_len)
         self._free: deque[int] = deque(range(scfg.batch))
-        self._waiting: deque[tuple[int, np.ndarray, int]] = deque()
+        # waiting rids, kept sorted by (-priority, seq): head = best request.
+        # Preempted requests keep their original seq, so they re-enter ahead
+        # of later arrivals of the same priority.
+        self._waiting: list[int] = []
+        self._reqs: dict[int, _ReqInfo] = {}
         self._slots: dict[int, _SlotState] = {}
         self._rows: dict[int, _PagedRow] = {}
         self._outputs: dict[int, list[int]] = {}
         self._next_rid = 0
+        self._next_seq = 0
+        self._step_no = 0
+        self._stalled = 0            # consecutive idle no-progress steps
         self._cur_tok = np.zeros((scfg.batch,), np.int32)
-        # scheduling evidence for the iso-memory benches: the peak number
-        # of simultaneously active slots, and total admissions
-        self.stats = {"peak_active": 0, "admitted": 0}
+        # scheduling evidence for the iso-memory benches plus the lifecycle
+        # counters the chaos harness and fault-storm bench report
+        self.stats = {
+            "peak_active": 0,
+            "admitted": 0,
+            "preempted": 0,
+            "recovered": 0,
+            "cancelled": 0,
+            "expired": 0,
+            "rejected": 0,
+            "shed": 0,
+        }
 
         model, impl, axes = self.model, self._impl, self._axes
         attn = self._attn
@@ -292,10 +506,17 @@ class Engine:
     def submit(self, req: Request) -> int:
         """Queue a request; returns its id.  Prompts longer than
         ``max_len - 1`` keep their most recent tokens; ``max_new_tokens`` is
-        truncated so the request never outgrows its slot."""
+        truncated so the request never outgrows its slot.  A full waiting
+        queue (``ServeConfig.max_waiting``) REJECTs the submission instead
+        of raising — poll :meth:`status` / :meth:`pop_result`."""
         rid = req.request_id if req.request_id is not None else self._next_rid
-        if rid in self._outputs:
+        if rid in self._reqs:
             raise ValueError(f"duplicate request_id {rid}")
+        if req.deadline_steps is not None and req.deadline_steps < 0:
+            raise ValueError(
+                f"request {rid}: deadline_steps must be >= 0: "
+                f"{req.deadline_steps}"
+            )
         self._next_rid = max(self._next_rid, rid + 1)
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         max_len = self.scfg.max_len
@@ -317,10 +538,49 @@ class Engine:
                     f"but the whole pool holds {cap_tokens}; grow "
                     f"num_blocks or shorten the request"
                 )
+        deadline = (
+            self._step_no + req.deadline_steps
+            if req.deadline_steps is not None
+            else None
+        )
+        info = _ReqInfo(
+            rid=rid,
+            prompt=prompt,
+            budget=budget,
+            priority=int(req.priority),
+            deadline=deadline,
+            seq=self._next_seq,
+        )
+        self._next_seq += 1
+        self._reqs[rid] = info
         self._outputs[rid] = []
-        if budget > 0 and len(prompt) > 0:
-            self._waiting.append((rid, prompt, budget))
+        if budget <= 0 or len(prompt) == 0:
+            self._finish(info, RequestStatus.FINISHED, "empty prompt or budget")
+            return rid
+        if (
+            self.scfg.max_waiting is not None
+            and len(self._waiting) >= self.scfg.max_waiting
+        ):
+            self.stats["rejected"] += 1
+            self._finish(
+                info,
+                RequestStatus.REJECTED,
+                f"queue full (max_waiting={self.scfg.max_waiting})",
+            )
+            return rid
+        self._enqueue(info)
         return rid
+
+    def _enqueue(self, info: _ReqInfo) -> None:
+        bisect.insort(
+            self._waiting,
+            info.rid,
+            key=lambda r: (-self._reqs[r].priority, self._reqs[r].seq),
+        )
+
+    def _finish(self, info: _ReqInfo, status: RequestStatus, reason: str) -> None:
+        info.status = status
+        info.reason = reason
 
     def _bucket_len(self, plen: int) -> int:
         scfg = self.scfg
@@ -334,35 +594,51 @@ class Engine:
             lpad = plen  # bucket would overflow the cache: exact length
         return lpad
 
-    def _activate(self, rid, budget, slot, tok, on_token) -> bool:
+    def _activate(self, info: _ReqInfo, slot: int, tok: int, on_token) -> bool:
         """Shared first-token bookkeeping; returns True when the request
-        stays active (budget not exhausted at admission)."""
-        self._outputs[rid].append(tok)
+        stays active (budget not exhausted at admission).  A recovering
+        (preempted) request replays instead of emitting: its recorded
+        first token must re-derive bitwise from the fresh prefill."""
+        out = self._outputs[info.rid]
+        replay = len(out)
+        if replay:
+            assert tok == out[0], (
+                f"request {info.rid}: recovery re-prefill diverged at token "
+                f"0 ({tok} != recorded {out[0]})"
+            )
+            self.stats["recovered"] += 1
+        else:
+            out.append(tok)
         self._cur_tok[slot] = tok
-        done = budget == 1
-        if on_token is not None:
-            on_token(rid, tok, 0, done)
+        info.status = RequestStatus.ACTIVE
+        # the slot is registered BEFORE the callback runs so a callback
+        # that cancels/preempts (stop sequences, client disconnects) goes
+        # through the ordinary ACTIVE eviction path
+        self._slots[slot] = _SlotState(
+            rid=info.rid, emitted=1, budget=info.budget, replay=replay
+        )
+        done = info.budget == 1
+        if not replay and on_token is not None:
+            on_token(info.rid, tok, 0, done)
+        if info.status != RequestStatus.ACTIVE:
+            return False  # callback ended it; slot already released
         if done:
-            if self._paged:
-                self._evict_paged(slot)
-            self._free.append(slot)
+            self._release_slot(slot)
+            self._finish(info, RequestStatus.FINISHED, "")
             return False
-        self._slots[slot] = _SlotState(rid=rid, emitted=1, budget=budget)
         return True
 
     @staticmethod
-    def _prompt_batch(lpad: int, items: list) -> tuple:
+    def _prompt_batch(lpad: int, infos: list[_ReqInfo]) -> tuple:
         """Right-pad one admission group's prompts into a (n, lpad) token
-        batch plus per-row request ids / true lengths.  Items are the
-        group tuples of either admission path, led by (rid, prompt, ...)."""
-        n = len(items)
+        batch plus per-row request ids / true lengths."""
+        n = len(infos)
         toks = np.zeros((n, lpad), np.int32)
         rids = np.empty((n,), np.int32)
         tlens = np.empty((n,), np.int32)
-        for j, it in enumerate(items):
-            rid, prompt = it[0], it[1]
-            toks[j, : len(prompt)] = prompt
-            rids[j], tlens[j] = rid, len(prompt)
+        for j, info in enumerate(infos):
+            toks[j, : len(info.prompt)] = info.prompt
+            rids[j], tlens[j] = info.rid, len(info.prompt)
         return toks, rids, tlens
 
     def _admit_waiting(self, on_token: TokenCallback | None) -> bool:
@@ -374,16 +650,16 @@ class Engine:
         Returns True when anything was admitted."""
         if self._paged:
             return self._admit_waiting_paged(on_token)
-        groups: dict[int, list[tuple[int, np.ndarray, int, int]]] = {}
+        groups: dict[int, list[tuple[_ReqInfo, int]]] = {}
         while self._free and self._waiting:
-            rid, prompt, budget = self._waiting.popleft()
+            info = self._reqs[self._waiting.pop(0)]
             slot = self._free.popleft()
-            lpad = self._bucket_len(len(prompt))
-            groups.setdefault(lpad, []).append((rid, prompt, budget, slot))
+            lpad = self._bucket_len(len(info.prompt))
+            groups.setdefault(lpad, []).append((info, slot))
 
         for lpad, items in groups.items():
-            toks, rids, tlens = self._prompt_batch(lpad, items)
-            slots_ = np.asarray([it[3] for it in items], np.int32)
+            toks, rids, tlens = self._prompt_batch(lpad, [it[0] for it in items])
+            slots_ = np.asarray([it[1] for it in items], np.int32)
             toks0, self.caches = self._admit_group(
                 self.params,
                 jnp.asarray(toks),
@@ -394,25 +670,26 @@ class Engine:
             )
             toks0 = np.asarray(toks0)
             self.stats["admitted"] += len(items)
-            for j, (rid, prompt, budget, slot) in enumerate(items):
-                self._activate(rid, budget, slot, int(toks0[j]), on_token)
+            for j, (info, slot) in enumerate(items):
+                self._activate(info, slot, int(toks0[j]), on_token)
         self.stats["peak_active"] = max(self.stats["peak_active"], len(self._slots))
         return bool(groups)
 
     # ------------------------------------------------------ paged admission --
     def _admit_waiting_paged(self, on_token: TokenCallback | None) -> bool:
         """Paged admission: a request enters when a slot AND enough free
-        blocks are available (strict FIFO — the queue head never gets
-        jumped).  Ownership is committed host-side first (prefix match ->
-        retain aliases, allocate the rest, register this chain), then each
-        prefill group runs as one jitted call and each row's private blocks
-        are packed into the pool."""
+        blocks are available (strict order over (-priority, arrival) — the
+        queue head never gets jumped).  Ownership is committed host-side
+        first (prefix match -> retain aliases, allocate the rest, register
+        this chain), then each prefill group runs as one jitted call and
+        each row's private blocks are packed into the pool."""
         scfg = self.scfg
         bs = scfg.block_size
         n_blk = scfg.max_len // bs
-        groups: dict[int, list[tuple[int, np.ndarray, int, int, _PagedRow]]] = {}
+        groups: dict[int, list[tuple[_ReqInfo, int, _PagedRow]]] = {}
         while self._free and self._waiting:
-            rid, prompt, budget = self._waiting[0]
+            info = self._reqs[self._waiting[0]]
+            prompt, budget = info.prompt, info.budget
             plen = len(prompt)
             total = -(-(plen + budget) // bs)
             shared_full: list[int] = []
@@ -424,7 +701,7 @@ class Engine:
             need = total - n_shared + (1 if cow_needed else 0)
             if need > self.pool.free_blocks:
                 break  # head-of-line waits for completions to free blocks
-            self._waiting.popleft()
+            self._waiting.pop(0)
             slot = self._free.popleft()
             for b in shared_full:
                 self.pool.retain(b)
@@ -459,10 +736,10 @@ class Engine:
             )
             self._rows[slot] = row
             lpad = self._bucket_len(plen)
-            groups.setdefault(lpad, []).append((rid, prompt, budget, slot, row))
+            groups.setdefault(lpad, []).append((info, slot, row))
 
         for lpad, items in groups.items():
-            toks, rids, tlens = self._prompt_batch(lpad, items)
+            toks, rids, tlens = self._prompt_batch(lpad, [it[0] for it in items])
             toks0, scratch = self._paged_prefill(
                 self.params,
                 jnp.asarray(toks),
@@ -471,7 +748,7 @@ class Engine:
             )
             toks0 = np.asarray(toks0)
             self.stats["admitted"] += len(items)
-            for j, (rid, prompt, budget, slot, row) in enumerate(items):
+            for j, (info, slot, row) in enumerate(items):
                 table_row = np.full((n_blk,), kvcache.SINK_BLOCK, np.int32)
                 table_row[: len(row.blocks)] = row.blocks
                 self.caches = self._set_row(
@@ -491,7 +768,7 @@ class Engine:
                         jnp.int32(start),
                         jnp.asarray(row.blocks[start : start + n_pack], jnp.int32),
                     )
-                self._activate(rid, budget, slot, int(toks0[j]), on_token)
+                self._activate(info, slot, int(toks0[j]), on_token)
         self.stats["peak_active"] = max(self.stats["peak_active"], len(self._slots))
         return bool(groups)
 
@@ -518,10 +795,11 @@ class Engine:
             row.tail_shared = False
 
     def _evict_paged(self, slot: int) -> None:
-        """Release a finished row: repoint its device table at the sink
-        (the always-full-batch decode keeps writing through dead rows, and
-        these blocks are about to be reused) and return every owned block
-        to the pool."""
+        """Release a finished/cancelled/preempted row: repoint its device
+        table at the sink (the always-full-batch decode keeps writing
+        through dead rows, and these blocks are about to be reused) and
+        return every owned block — including a still-pending CoW
+        reservation — to the pool."""
         row = self._rows.pop(slot)
         self.caches = self._set_row(
             self.caches,
@@ -533,6 +811,18 @@ class Engine:
             self.pool.release(b)
         if row.cow_dst is not None:
             self.pool.release(row.cow_dst)
+
+    def _release_slot(self, slot: int) -> None:
+        """Evict a live slot for any reason (finish, cancel, deadline,
+        preemption): paged rows release their blocks through the sink
+        repoint, and the slot returns to the free ring for backfill."""
+        del self._slots[slot]
+        if self._paged:
+            self._evict_paged(slot)
+        self._free.append(slot)
+
+    def _slot_of(self, rid: int) -> int:
+        return next(s for s, st in self._slots.items() if st.rid == rid)
 
     def live_block_refs(self) -> dict[int, int]:
         """Physical block -> reference count implied by live rows (the
@@ -546,18 +836,150 @@ class Engine:
                 refs[row.cow_dst] = refs.get(row.cow_dst, 0) + 1
         return refs
 
+    # ---------------------------------------------------------- lifecycle --
+    def status(self, rid: int) -> RequestStatus:
+        info = self._reqs.get(rid)
+        return RequestStatus.UNKNOWN if info is None else info.status
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> RequestStatus:
+        """Cancel a request in any state: dequeue if waiting/preempted,
+        evict-and-release-blocks if active.  Idempotent — cancelling a
+        terminal (or unknown) request changes nothing and returns its
+        current status.  Partial tokens stay retrievable via
+        :meth:`pop_result`."""
+        info = self._reqs.get(rid)
+        if info is None:
+            return RequestStatus.UNKNOWN
+        if info.status in TERMINAL_STATUSES:
+            return info.status
+        if info.status == RequestStatus.ACTIVE:
+            self._release_slot(self._slot_of(rid))
+        else:  # WAITING or PREEMPTED: sitting in the queue
+            self._waiting.remove(rid)
+        self.stats["cancelled"] += 1
+        self._finish(info, RequestStatus.CANCELLED, reason)
+        return RequestStatus.CANCELLED
+
+    def preempt(self, rid: int) -> bool:
+        """Forcibly evict an ACTIVE request: its blocks are released (table
+        repointed at the sink) and it is requeued as PREEMPTED at its
+        original arrival position.  On re-admission the prompt re-prefills
+        through the prefix index and the already-generated tokens replay
+        through the identical decode programs, so the resumed output is
+        bitwise identical to an uninterrupted run.  Returns False for
+        non-active requests."""
+        info = self._reqs.get(rid)
+        if info is None or info.status != RequestStatus.ACTIVE:
+            return False
+        self._release_slot(self._slot_of(rid))
+        info.status = RequestStatus.PREEMPTED
+        info.preemptions += 1
+        self.stats["preempted"] += 1
+        self._enqueue(info)
+        return True
+
+    def _expire_deadlines(self) -> None:
+        """FAIL every request whose deadline has passed, waiting or active,
+        through the same eviction path as cancellation."""
+        now = self._step_no
+        for rid in [
+            r
+            for r in self._waiting
+            if self._reqs[r].deadline is not None and now > self._reqs[r].deadline
+        ]:
+            self._waiting.remove(rid)
+            self.stats["expired"] += 1
+            self._finish(
+                self._reqs[rid], RequestStatus.FAILED, "deadline expired in queue"
+            )
+        for slot in [
+            s
+            for s, st in sorted(self._slots.items())
+            if self._reqs[st.rid].deadline is not None
+            and now > self._reqs[st.rid].deadline
+        ]:
+            info = self._reqs[self._slots[slot].rid]
+            self._release_slot(slot)
+            self.stats["expired"] += 1
+            self._finish(info, RequestStatus.FAILED, "deadline expired while active")
+
+    def _blocks_needed(self, info: _ReqInfo) -> int:
+        """Free blocks the paged admission of ``info`` would consume right
+        now (worst-case reservation minus prefix aliases, plus a CoW
+        target) — the same arithmetic `_admit_waiting_paged` commits."""
+        bs = self.scfg.block_size
+        total = -(-(len(info.prompt) + info.budget) // bs)
+        if not self.scfg.prefix_sharing:
+            return total
+        shared_full, shared_tail = self.pool.match_prefix(info.prompt.tolist())
+        n_shared = len(shared_full) + (1 if shared_tail is not None else 0)
+        cow = shared_tail is not None and info.budget > 1
+        return total - n_shared + (1 if cow else 0)
+
+    def _preempt_pass(self) -> None:
+        """Priority preemption: while the best waiting request is starved
+        (no free slot, or — paged — not enough free blocks) and a strictly
+        lower-priority request is active, evict the worst victim (lowest
+        priority, then youngest) and retry.  Victims recover bitwise after
+        re-admission, so a preemption that frees less than hoped (shared
+        blocks stay referenced) costs replay latency, never correctness."""
+        while self._waiting:
+            head = self._reqs[self._waiting[0]]
+            starved = not self._free or (
+                self._paged and self._blocks_needed(head) > self.pool.free_blocks
+            )
+            if not starved:
+                return
+            victims = sorted(
+                (self._reqs[st.rid].priority, -self._reqs[st.rid].seq, st.rid)
+                for st in self._slots.values()
+                if self._reqs[st.rid].priority < head.priority
+            )
+            if not victims:
+                return
+            self.preempt(victims[0][2])
+
     # -------------------------------------------------------------- drive --
     def step(self, on_token: TokenCallback | None = None) -> bool:
-        """One engine iteration: backfill free slots from the queue, then
+        """One engine iteration: expire deadlines, preempt for starved
+        higher-priority arrivals, backfill free slots from the queue, then
         advance every occupied slot by one decode token.  Returns False
         once the engine is idle."""
+        self._step_no += 1
+        self._expire_deadlines()
+        self._preempt_pass()
+        admitted = False
         while self._free and self._waiting:
             if not self._admit_waiting(on_token):
                 break  # paged: head of queue waits for free blocks
+            admitted = True
         if self._paged:
             self._resolve_cow()
         if not self._slots:
+            if not self._waiting:
+                self._stalled = 0
+                return False
+            if admitted:
+                # budget-1 admissions finished instantly: that is progress
+                self._stalled = 0
+            else:
+                # zero active slots, zero admissions, a non-empty queue:
+                # nothing inside the engine can free capacity.  Shed the
+                # head after `stall_patience` such steps instead of
+                # spinning forever on externally-held or leaked blocks.
+                self._stalled += 1
+                if self._stalled >= self.scfg.stall_patience:
+                    info = self._reqs[self._waiting.pop(0)]
+                    self.stats["shed"] += 1
+                    self._finish(
+                        info,
+                        RequestStatus.REJECTED,
+                        f"shed by watchdog: no admission progress in "
+                        f"{self._stalled} idle steps",
+                    )
+                    self._stalled = 0
             return bool(self._waiting)
+        self._stalled = 0
 
         B = self.scfg.batch
         rids = np.zeros((B,), np.int32)
@@ -576,43 +998,73 @@ class Engine:
 
         finished = []
         for s in sorted(self._slots):
-            st = self._slots[s]
+            st = self._slots.get(s)
+            if st is None:
+                continue  # an on_token callback cancelled this row mid-loop
             tok = int(nxt[s])
-            self._outputs[st.rid].append(tok)
+            out = self._outputs[st.rid]
+            if st.emitted < st.replay:
+                # preemption recovery: the decode programs are
+                # deterministic, so the replayed token must re-derive the
+                # recorded one bitwise; it was already emitted pre-eviction
+                assert tok == out[st.emitted], (
+                    f"request {st.rid}: recovery replay diverged at token "
+                    f"{st.emitted} ({tok} != recorded {out[st.emitted]})"
+                )
+                st.emitted += 1
+                continue
+            out.append(tok)
             st.emitted += 1
             done = st.emitted >= st.budget
             if on_token is not None:
                 on_token(st.rid, tok, st.emitted - 1, done)
             if done:
-                finished.append(s)
-        for s in finished:
-            del self._slots[s]
-            if self._paged:
-                self._evict_paged(s)
-            self._free.append(s)  # backfilled at the next step
+                finished.append((s, st.rid))
+        for s, rid in finished:
+            st = self._slots.get(s)
+            if st is None or st.rid != rid:
+                continue  # the done-callback already cancelled it
+            self._release_slot(s)  # backfilled at the next step
+            self._finish(self._reqs[rid], RequestStatus.FINISHED, "")
         return True
 
-    def pop_result(self, rid: int) -> np.ndarray:
-        """Take (and free) a request's accumulated tokens.  Long-running
-        step()-driven servers must call this after a request's ``done``
-        callback, or completed outputs accumulate without bound."""
-        return np.asarray(self._outputs.pop(rid), np.int32)
+    def pop_result(self, rid: int) -> RequestResult:
+        """Take a request's :class:`RequestResult`.  Terminal requests are
+        consumed (their id becomes reusable); a live request's result is a
+        non-consuming snapshot of its current status and partial tokens;
+        an unknown id reports ``UNKNOWN`` instead of raising.  Long-running
+        step()-driven servers must pop terminal results, or completed
+        outputs accumulate without bound."""
+        info = self._reqs.get(rid)
+        if info is None:
+            return RequestResult(
+                RequestStatus.UNKNOWN,
+                np.zeros((0,), np.int32),
+                reason="request id never submitted (or already popped)",
+            )
+        tokens = np.asarray(self._outputs[rid], np.int32)
+        result = RequestResult(info.status, tokens, info.reason, info.preemptions)
+        if info.status in TERMINAL_STATUSES:
+            del self._reqs[rid]
+            del self._outputs[rid]
+        return result
 
     def run(
         self,
         requests: list[Request] = (),
         on_token: TokenCallback | None = None,
-    ) -> list[np.ndarray]:
+    ) -> list[RequestResult]:
         """Submit ``requests``, drive the engine dry, and return each
-        request's generated tokens (in submission order).  Returned results
-        are evicted from the engine (their ids become reusable)."""
+        request's :class:`RequestResult` (in submission order; array-like,
+        so legacy token-array callers keep working).  Returned results are
+        evicted from the engine (their ids become reusable)."""
         rids = [self.submit(r) for r in requests]
         while self.step(on_token):
             pass
         return [self.pop_result(r) for r in rids]
 
     # legacy API (PR-2-era callers): identical signature, continuous core
-    def generate(self, requests: list[Request]) -> list[np.ndarray]:
+    def generate(self, requests: list[Request]) -> list[RequestResult]:
         return self.run(requests)
 
 
@@ -628,7 +1080,12 @@ class StaticEngine:
         if scfg.kv_layout != "contiguous":
             # silently serving contiguous numbers under a paged config
             # would corrupt every A/B built on this baseline
-            raise ValueError("StaticEngine serves the contiguous layout only")
+            raise ValueError(
+                "StaticEngine serves the contiguous layout only (fixed "
+                "lockstep batches have no block pool); use Engine for "
+                "kv_layout='paged', or drop kv_layout/num_blocks from "
+                "ServeConfig for the static baseline"
+            )
         self.cfg = cfg
         self.model = build(cfg)
         self.params = params

@@ -387,6 +387,11 @@ class BlockPool:
         # key tuples of different fills never collide.
         self.index: dict[tuple[int, tuple[int, ...]], int] = {}
         self._keys_of: dict[int, list] = {}
+        # blocks held by an EXTERNAL actor (chaos pressure spikes, a future
+        # multi-tenant reservation API): invisible to the engine's rows but
+        # accounted by assert_invariants so pressure never masquerades as a
+        # leak.  Populated only via reserve()/unreserve().
+        self.external: set[int] = set()
 
     @property
     def free_blocks(self) -> int:
@@ -410,6 +415,25 @@ class BlockPool:
                 if self.index.get(key) == bid:
                     del self.index[key]
             self.free.append(bid)
+
+    def reserve(self, n: int) -> list[int]:
+        """Withhold up to ``n`` free blocks from the pool on behalf of an
+        external actor (the chaos harness's pressure spikes; never the
+        engine).  Returns the block ids actually reserved — fewer than
+        ``n`` when the pool is drier than asked."""
+        got = []
+        for _ in range(min(n, len(self.free))):
+            bid = self.alloc()
+            self.external.add(bid)
+            got.append(bid)
+        return got
+
+    def unreserve(self, bids: list[int]) -> None:
+        """Return externally reserved blocks to the pool."""
+        for bid in bids:
+            assert bid in self.external, f"unreserve of non-reserved block {bid}"
+            self.external.discard(bid)
+            self.release(bid)
 
     def register(self, prev: int, tokens: tuple[int, ...], bid: int) -> None:
         """Expose a block's content to future prefix matches.  First
@@ -443,7 +467,7 @@ class BlockPool:
         """``live_refs``: physical block -> reference count derived from
         the engine's live rows.  Raises on any ownership drift."""
         for bid in range(1, self.num_blocks):
-            want = live_refs.get(bid, 0)
+            want = live_refs.get(bid, 0) + (1 if bid in self.external else 0)
             assert self.refcount[bid] == want, (
                 f"block {bid}: refcount {self.refcount[bid]} != live refs {want}"
             )

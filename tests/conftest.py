@@ -20,3 +20,17 @@ def fuzz_examples(default: int) -> int:
     ``default`` in CI (fixed seeds keep runs reproducible), cranked locally
     via ``FUZZ_EXAMPLES=N make test-fuzz``."""
     return int(os.environ.get("FUZZ_EXAMPLES", default))
+
+
+def chaos_episodes(default: int) -> int:
+    """Episode count for the ``chaos``-marked fault-injection suites: a
+    small ``default`` inside the full test run, cranked to the acceptance
+    matrix by ``make test-chaos`` (CHAOS_EPISODES=200)."""
+    return int(os.environ.get("CHAOS_EPISODES", default))
+
+
+def chaos_seed() -> int:
+    """Base seed for the chaos episode matrix; CI runs the named chaos
+    step once per CHAOS_SEED value, so episodes never repeat across the
+    matrix while every failure reproduces from its printed seed."""
+    return int(os.environ.get("CHAOS_SEED", 0))

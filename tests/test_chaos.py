@@ -1,0 +1,205 @@
+"""Seeded fault-injection chaos episodes (serve/chaos.py).
+
+Each episode drives a random workload through a reused engine while a
+seeded schedule injects cancels, double-cancels, deadline storms, forced
+preemptions, and external block-pressure spikes; ownership invariants are
+audited after every step and the drained end state must agree bitwise
+with an unfaulted oracle (see serve/chaos.py's module docstring).
+
+The in-suite default is a small episode count; the acceptance matrix is
+``make test-chaos`` (CHAOS_EPISODES=200), and CI shards the seed space via
+CHAOS_SEED.  Any failure prints the episode seed; replay it locally with
+``CHAOS_EPISODES=1 CHAOS_SEED=<seed> make test-chaos``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import chaos_episodes, chaos_seed
+from repro.arch.model_zoo import build
+from repro.configs.registry import get
+from repro.serve import chaos
+from repro.serve.engine import Engine, RequestStatus, ServeConfig
+
+MAX_LEN = 64
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get("smollm-360m-smoke")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _setups(cfg, params):
+    """Three reused (faulted engine, oracle engine) pairs: an ample paged
+    pool, a block-starved paged pool (admission waits and preemption must
+    free real capacity), and the contiguous engine (the lifecycle layer is
+    layout-agnostic).  Oracles pin the contiguous decode split to the
+    paged block size, the PR-5 bitwise-differential idiom."""
+    common = dict(
+        batch=3,
+        max_len=MAX_LEN,
+        temperature=0.7,
+        seed=5,
+        prefill_bucket=16,
+    )
+    oracle_scfg = ServeConfig(attention="flash", decode_block=BS, **common)
+    paged = dict(kv_layout="paged", block_size=BS, **common)
+    return [
+        (
+            "paged-ample",
+            Engine(cfg, params, ServeConfig(stall_patience=6, **paged)),
+            Engine(cfg, params, oracle_scfg),
+        ),
+        (
+            # 11 usable blocks (88 tokens) against 3 slots wanting up to
+            # 64 each: admission is perpetually block-starved, spikes can
+            # drain the pool to zero, the watchdog must shed, and
+            # priority preemption is the only way heads ever jump
+            "paged-starved",
+            Engine(
+                cfg,
+                params,
+                ServeConfig(
+                    num_blocks=12, stall_patience=4, max_waiting=8, **paged
+                ),
+            ),
+            Engine(cfg, params, oracle_scfg),
+        ),
+        (
+            "contiguous",
+            Engine(cfg, params, ServeConfig(stall_patience=6, **common)),
+            Engine(cfg, params, ServeConfig(**common)),
+        ),
+    ]
+
+
+@pytest.mark.chaos
+def test_chaos_episode_matrix(smol):
+    cfg, params = smol
+    setups = _setups(cfg, params)
+    n = chaos_episodes(24)
+    base = chaos_seed()
+    ccfg = chaos.ChaosConfig()
+    reports = []
+    for ep in range(n):
+        name, eng, oracle_eng = setups[ep % len(setups)]
+        seed = base + 1000 + ep
+        rng = np.random.default_rng(seed)
+        reqs = chaos.make_chaos_workload(rng, cfg.vocab, MAX_LEN, ccfg)
+        oracle = chaos.oracle_outputs(oracle_eng, reqs)
+        reports.append(chaos.run_episode(eng, oracle, reqs, seed, ccfg))
+
+    # every fault class must actually have fired somewhere in the matrix —
+    # a chaos suite whose faults never land is a green light worth nothing
+    total = {}
+    for rep in reports:
+        for k, v in rep.stats.items():
+            total[k] = total.get(k, 0) + v
+    assert total["cancelled"] > 0, "no cancellation ever fired"
+    assert total["preempted"] > 0, "no preemption ever fired"
+    assert total["recovered"] > 0, "no preempted request ever recovered"
+    assert total["expired"] > 0, "no deadline ever expired"
+    finished = sum(r.statuses.get("FINISHED", 0) for r in reports)
+    assert finished > 0, "no request ever survived the chaos"
+
+
+@pytest.mark.chaos
+def test_chaos_episode_replays_identically(smol):
+    """An episode is a pure function of (engine config, seed): the same
+    seed must produce the same steps, statuses, and lifecycle counters —
+    this is what makes a CI chaos failure reproducible from its seed."""
+    cfg, params = smol
+    ccfg = chaos.ChaosConfig()
+    seed = chaos_seed() + 77
+
+    def once():
+        eng = Engine(
+            cfg,
+            params,
+            ServeConfig(
+                batch=3,
+                max_len=MAX_LEN,
+                kv_layout="paged",
+                block_size=BS,
+                temperature=0.7,
+                seed=5,
+                prefill_bucket=16,
+                stall_patience=6,
+            ),
+        )
+        oracle_eng = Engine(
+            cfg,
+            params,
+            ServeConfig(
+                batch=3,
+                max_len=MAX_LEN,
+                attention="flash",
+                decode_block=BS,
+                temperature=0.7,
+                seed=5,
+                prefill_bucket=16,
+            ),
+        )
+        rng = np.random.default_rng(seed)
+        reqs = chaos.make_chaos_workload(rng, cfg.vocab, MAX_LEN, ccfg)
+        oracle = chaos.oracle_outputs(oracle_eng, reqs)
+        return chaos.run_episode(eng, oracle, reqs, seed, ccfg)
+
+    a, b = once(), once()
+    assert (a.steps, a.statuses, a.stats) == (b.steps, b.statuses, b.stats)
+
+
+@pytest.mark.chaos
+def test_chaos_spike_starves_then_recovers(smol):
+    """Deterministic spike scenario: an external reservation takes the
+    whole pool mid-flight; admission stalls (requests wait, nothing is
+    corrupted), and releasing the reservation lets the queue drain with
+    bitwise-intact outputs."""
+    cfg, params = smol
+    eng = Engine(
+        cfg,
+        params,
+        ServeConfig(
+            batch=2,
+            max_len=MAX_LEN,
+            kv_layout="paged",
+            block_size=BS,
+            prefill_bucket=16,
+            stall_patience=100,  # out of reach: the stall must NOT shed
+        ),
+    )
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 20).astype(np.int32) for _ in range(3)]
+    from repro.serve.engine import Request
+
+    for i, p in enumerate(prompts):
+        eng.submit(Request(p, 6, request_id=i))
+    eng.step()  # admit what fits
+    held = eng.pool.reserve(eng.pool.free_blocks)  # drain the pool
+    for _ in range(8):
+        eng.step()
+        # keep the pool at zero: grab blocks the moment finishers free them
+        held += eng.pool.reserve(eng.pool.free_blocks)
+        chaos.audit(eng)
+    assert eng.status(2) == RequestStatus.WAITING, "admission should stall"
+    eng.pool.unreserve(held)
+    while eng.step():
+        chaos.audit(eng)
+    assert eng.status(2) == RequestStatus.FINISHED
+    solo = Engine(
+        cfg,
+        params,
+        ServeConfig(
+            batch=2,
+            max_len=MAX_LEN,
+            attention="flash",
+            decode_block=BS,
+            prefill_bucket=16,
+        ),
+    ).run([Request(prompts[2], 6, request_id=2)])[0]
+    assert np.array_equal(eng.pop_result(2), solo)
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1

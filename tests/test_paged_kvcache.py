@@ -238,6 +238,158 @@ def test_prefix_sharing_aliases_and_cow(smol):
     assert eng.pool.free_blocks == eng.pool.num_blocks - 1
 
 
+def test_evict_then_readmit_same_slot(smol):
+    """Cancellation frees a slot mid-flight; the next admission reuses
+    that same slot and must see no stale state: fresh table row, fresh
+    blocks, output bitwise equal to a solo run, zero leak at drain."""
+    cfg, params = smol
+    eng = Engine(cfg, params, _paged_scfg(batch=2, bs=16))
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab, 12).astype(np.int32) for _ in range(3)]
+    eng.submit(Request(prompts[0], 12, request_id=0))
+    eng.submit(Request(prompts[1], 12, request_id=1))
+    eng.step()
+    eng.step()
+    victim_slot = next(s for s, st in eng._slots.items() if st.rid == 0)
+    eng.cancel(0)
+    _check_pool(eng)
+    eng.submit(Request(prompts[2], 6, request_id=2))
+    eng.step()
+    assert next(s for s, st in eng._slots.items() if st.rid == 2) == victim_slot
+    _check_pool(eng)
+    _check_device_tables(eng)
+    while eng.step():
+        pass
+    solo = Engine(cfg, params, _paged_scfg(batch=2, bs=16)).run(
+        [Request(prompts[2], 6, request_id=2)]
+    )[0]
+    assert np.array_equal(eng.pop_result(2), solo)
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+
+def test_cancel_during_pending_cow_releases_reservation(smol):
+    """Adversarial interleaving: an exact-prompt twin is cancelled from
+    its own first-token callback — AFTER admission reserved its CoW block
+    but BEFORE ``_resolve_cow`` ran.  The eviction must release both the
+    shared tail reference and the pending CoW reservation, leaving the
+    creator untouched."""
+    cfg, params = smol
+    eng = Engine(cfg, params, _paged_scfg(batch=2, bs=16))
+    rng = np.random.default_rng(23)
+    pre = rng.integers(0, cfg.vocab, 40).astype(np.int32)  # 2 full + tail 8
+    eng.submit(Request(pre.copy(), 10, request_id=0))
+    eng.step()  # request 0 active, its prompt chain registered
+    eng.submit(Request(pre.copy(), 10, request_id=1))  # exact twin
+    seen = {}
+
+    def cb(rid, tok, idx, done):
+        if rid == 1 and idx == 0:
+            slot = next(s for s, st in eng._slots.items() if st.rid == 1)
+            row = eng._rows[slot]
+            assert row.tail_shared and row.cow_dst is not None
+            seen["cow"] = row.cow_dst
+            seen["tail"] = row.blocks[2]
+            from repro.serve.engine import RequestStatus
+
+            assert eng.cancel(1) == RequestStatus.CANCELLED
+
+    eng.step(on_token=cb)
+    assert "cow" in seen, "twin admission callback never fired"
+    _check_pool(eng)
+    _check_device_tables(eng)
+    # CoW reservation back in the free list; tail back to creator-only
+    assert eng.pool.refcount[seen["cow"]] == 0
+    assert eng.pool.refcount[seen["tail"]] == 1
+    while eng.step():
+        pass
+    solo = Engine(cfg, params, _paged_scfg(batch=2, bs=16)).run(
+        [Request(pre.copy(), 10, request_id=0)]
+    )[0]
+    assert np.array_equal(eng.pop_result(0), solo)
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+
+def test_double_cancel_idempotent(smol):
+    """Cancelling twice (or cancelling FINISHED/unknown ids) is a no-op
+    reporting the existing terminal status — clients can fire-and-forget
+    cancels without racing completions."""
+    from repro.serve.engine import RequestStatus
+
+    cfg, params = smol
+    eng = Engine(cfg, params, _paged_scfg(batch=1, bs=16))
+    rng = np.random.default_rng(29)
+    eng.submit(Request(rng.integers(0, cfg.vocab, 8).astype(np.int32), 8, request_id=0))
+    eng.submit(Request(rng.integers(0, cfg.vocab, 8).astype(np.int32), 8, request_id=1))
+    eng.step()  # 0 active, 1 waiting (single slot)
+    assert eng.cancel(1) == RequestStatus.CANCELLED  # waiting-state cancel
+    assert eng.cancel(1) == RequestStatus.CANCELLED  # double-cancel: no-op
+    assert eng.stats["cancelled"] == 1
+    assert eng.cancel(0) == RequestStatus.CANCELLED  # active-state cancel
+    assert eng.cancel(0) == RequestStatus.CANCELLED
+    assert eng.stats["cancelled"] == 2
+    assert eng.cancel(99) == RequestStatus.UNKNOWN
+    _check_pool(eng)
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+    res = eng.pop_result(0)
+    assert res.status == RequestStatus.CANCELLED and len(res) >= 1
+    # popped: the id is gone, a third cancel reports UNKNOWN
+    assert eng.cancel(0) == RequestStatus.UNKNOWN
+
+
+@pytest.mark.fuzz
+def test_lifecycle_fuzz_cancel_preempt_invariants(smol):
+    """The step-granular trace fuzzer, extended with lifecycle events:
+    seeded random cancels (any state) and forced preemptions land between
+    steps while the ownership invariants and the device-table mirror are
+    audited after every step.  Survivors must match the unfaulted oracle
+    bitwise; everyone else must hold an oracle prefix."""
+    from repro.serve.engine import RequestStatus, TERMINAL_STATUSES
+
+    cfg, params = smol
+    for ex in range(fuzz_examples(3)):
+        rng = np.random.default_rng(300 + ex)
+        reqs = _random_workload(rng, cfg, 8, 64, share_p=0.6)
+        kw = dict(bs=8, batch=3, temperature=0.7, seed=int(ex))
+        oracle = {
+            r.request_id: o.tolist()
+            for r, o in zip(reqs, Engine(cfg, params, _oracle_scfg(**kw)).run(reqs))
+        }
+        eng = Engine(cfg, params, _paged_scfg(**kw))
+        for r in reqs:
+            eng.submit(r)
+        steps = 0
+        while eng._slots or eng._waiting:
+            if rng.random() < 0.2:
+                live = [
+                    r.request_id
+                    for r in reqs
+                    if eng.status(r.request_id) not in TERMINAL_STATUSES
+                ]
+                if live:
+                    eng.cancel(live[int(rng.integers(len(live)))])
+            if rng.random() < 0.2:
+                actives = [
+                    r.request_id
+                    for r in reqs
+                    if eng.status(r.request_id) == RequestStatus.ACTIVE
+                ]
+                if actives:
+                    eng.preempt(actives[int(rng.integers(len(actives)))])
+            eng.step()
+            _check_pool(eng)
+            _check_device_tables(eng)
+            steps += 1
+            assert steps < 600, "trace failed to drain"
+        assert eng.pool.free_blocks == eng.pool.num_blocks - 1, "block leak"
+        for r in reqs:
+            res = eng.pop_result(r.request_id)
+            got, want = res.tolist(), oracle[r.request_id]
+            if res.status == RequestStatus.FINISHED:
+                assert got == want, (ex, r.request_id, res.preemptions)
+            else:
+                assert got == want[: len(got)], (ex, r.request_id, res.status)
+
+
 def test_paged_flash_and_xla_substrates_agree(smol):
     """attention='flash' (backend auto) and attention='xla' (pinned gather
     twin) are substrate swaps on the paged layout, not semantics changes."""

@@ -9,7 +9,14 @@ import pytest
 from repro.arch.model_zoo import build
 from repro.configs.registry import get
 from repro.serve import kvcache
-from repro.serve.engine import Engine, Request, ServeConfig, StaticEngine
+from repro.serve.engine import (
+    Engine,
+    Request,
+    RequestResult,
+    RequestStatus,
+    ServeConfig,
+    StaticEngine,
+)
 
 
 @pytest.fixture(scope="module")
@@ -230,6 +237,239 @@ def test_decode_buffers_donated(smol):
     assert before == after, "decode step re-allocated donated KV buffers"
     while eng.step():
         pass
+
+
+# ---------------------------------------------------- request lifecycle --
+
+
+def test_cancel_in_every_state(smol):
+    """cancel() dequeues WAITING requests, evicts ACTIVE ones (slot frees
+    for backfill), no-ops on terminal/unknown ids, and keeps partial
+    tokens retrievable."""
+    cfg, params = smol
+    scfg = ServeConfig(batch=1, max_len=32)
+    eng = Engine(cfg, params, scfg)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab, 6).astype(np.int32) for _ in range(3)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(p, 8, request_id=i))
+    eng.step()  # 0 active; 1, 2 waiting
+    assert eng.status(0) == RequestStatus.ACTIVE
+    assert eng.cancel(1) == RequestStatus.CANCELLED  # waiting-state
+    eng.step()
+    eng.step()
+    assert eng.cancel(0) == RequestStatus.CANCELLED  # active-state
+    assert eng.status(0) == RequestStatus.CANCELLED
+    eng.step()  # slot backfills with request 2
+    assert eng.status(2) == RequestStatus.ACTIVE
+    while eng.step():
+        pass
+    # partial tokens of the active-cancel are the oracle's prefix
+    solo = Engine(cfg, params, scfg).run([Request(prompts[0], 8, request_id=0)])
+    part = eng.pop_result(0)
+    assert part.status == RequestStatus.CANCELLED
+    assert 1 <= len(part) < 8
+    assert np.array_equal(part.tokens, solo[0].tokens[: len(part)])
+    assert len(eng.pop_result(1)) == 0
+    assert eng.pop_result(2).status == RequestStatus.FINISHED
+    assert eng.cancel(42) == RequestStatus.UNKNOWN
+
+
+def test_deadline_expires_waiting_and_active(smol):
+    """deadline_steps bounds a request's wall-step lifetime: expiry in the
+    queue yields FAILED with no tokens; expiry while active evicts with
+    the generated prefix intact (bitwise oracle prefix)."""
+    cfg, params = smol
+    scfg = ServeConfig(batch=1, max_len=32)
+    eng = Engine(cfg, params, scfg)
+    rng = np.random.default_rng(19)
+    pa = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    eng.submit(Request(pa, 10, request_id=0))           # hogs the only slot
+    eng.submit(Request(pb, 10, request_id=1, deadline_steps=3))
+    while eng.step():
+        pass
+    assert eng.status(0) == RequestStatus.FINISHED
+    rb = eng.pop_result(1)
+    assert rb.status == RequestStatus.FAILED and "queue" in rb.reason
+    assert len(rb) == 0
+
+    eng2 = Engine(cfg, params, scfg)
+    eng2.submit(Request(pa, 10, request_id=0, deadline_steps=4))
+    while eng2.step():
+        pass
+    ra = eng2.pop_result(0)
+    assert ra.status == RequestStatus.FAILED and "active" in ra.reason
+    assert 1 <= len(ra) < 10
+    solo = Engine(cfg, params, scfg).run([Request(pa, 10, request_id=0)])[0]
+    assert np.array_equal(ra.tokens, solo.tokens[: len(ra)])
+    with pytest.raises(ValueError, match="deadline"):
+        eng2.submit(Request(pa, 4, request_id=9, deadline_steps=-1))
+
+
+def test_bounded_queue_rejects_overflow(smol):
+    """max_waiting bounds the queue: overflow submissions terminate
+    REJECTED immediately (no exception — poll the status), and everyone
+    already queued still completes."""
+    cfg, params = smol
+    eng = Engine(cfg, params, ServeConfig(batch=1, max_len=32, max_waiting=2))
+    rng = np.random.default_rng(31)
+    rids = [
+        eng.submit(Request(rng.integers(0, cfg.vocab, 5).astype(np.int32), 3,
+                           request_id=i))
+        for i in range(4)
+    ]
+    # slot not granted until step(): 0,1 queued; 2 hits the bound
+    assert eng.status(rids[2]) == RequestStatus.REJECTED
+    assert eng.status(rids[3]) == RequestStatus.REJECTED
+    assert eng.stats["rejected"] == 2
+    while eng.step():
+        pass
+    assert eng.pop_result(rids[0]).status == RequestStatus.FINISHED
+    assert eng.pop_result(rids[1]).status == RequestStatus.FINISHED
+    rej = eng.pop_result(rids[2])
+    assert rej.status == RequestStatus.REJECTED and "queue full" in rej.reason
+    assert len(rej) == 0
+
+
+def test_watchdog_sheds_stalled_queue(smol):
+    """Zero active slots + zero admission progress for stall_patience
+    steps (here: the pool is externally drained) must shed the queue head
+    REJECTED instead of livelocking."""
+    cfg, params = smol
+    eng = Engine(
+        cfg,
+        params,
+        ServeConfig(
+            batch=2,
+            max_len=32,
+            kv_layout="paged",
+            block_size=16,
+            stall_patience=3,
+        ),
+    )
+    held = eng.pool.reserve(eng.pool.free_blocks)  # external pressure
+    rng = np.random.default_rng(37)
+    eng.submit(Request(rng.integers(0, cfg.vocab, 5).astype(np.int32), 4,
+                       request_id=0))
+    assert eng.step() and eng.status(0) == RequestStatus.WAITING
+    assert eng.step() and eng.status(0) == RequestStatus.WAITING
+    # third consecutive stalled step: the watchdog sheds the head and the
+    # engine reports idle (queue drained by shedding)
+    assert not eng.step()
+    res = eng.pop_result(0)
+    assert res.status == RequestStatus.REJECTED and "watchdog" in res.reason
+    assert eng.stats["shed"] == 1
+    assert not eng.step()  # queue empty: engine is idle again
+    eng.pool.unreserve(held)
+    eng.pool.assert_invariants({})
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+
+def test_priority_preemption_recovers_bitwise(smol):
+    """A starved higher-priority arrival preempts the lowest-priority
+    active request; the victim requeues, re-admits, replays its recorded
+    tokens without re-emitting, and finishes bitwise identical to an
+    uninterrupted run."""
+    cfg, params = smol
+    scfg = ServeConfig(batch=1, max_len=48, temperature=0.6, seed=13)
+    eng = Engine(cfg, params, scfg)
+    rng = np.random.default_rng(41)
+    pl = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    ph = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    events = []
+    cb = lambda rid, tok, idx, done: events.append((rid, idx, tok, done))
+    eng.submit(Request(pl, 12, request_id=0, priority=0))
+    eng.step(cb)
+    eng.step(cb)  # low-prio holds the only slot, 2 tokens out
+    eng.submit(Request(ph, 4, request_id=1, priority=5))
+    while eng.step(cb):
+        pass
+    assert eng.stats["preempted"] == 1 and eng.stats["recovered"] == 1
+    rl, rh = eng.pop_result(0), eng.pop_result(1)
+    assert rh.status == RequestStatus.FINISHED and rh.preemptions == 0
+    assert rl.status == RequestStatus.FINISHED and rl.preemptions == 1
+    # the high-priority request finished before the victim resumed
+    done_order = [rid for rid, _, _, done in events if done]
+    assert done_order == [1, 0]
+    # every token index of the victim was emitted exactly once (replay
+    # suppressed re-emission), in order
+    lo_idx = [idx for rid, idx, _, _ in events if rid == 0]
+    assert lo_idx == list(range(12))
+    # bitwise identical to the uninterrupted run
+    solo = Engine(cfg, params, scfg).run([Request(pl, 12, request_id=0)])[0]
+    assert np.array_equal(rl.tokens, solo.tokens)
+    solo_h = Engine(cfg, params, scfg).run([Request(ph, 4, request_id=1)])[0]
+    assert np.array_equal(rh.tokens, solo_h.tokens)
+
+
+def test_equal_priority_never_preempts(smol):
+    """Preemption requires STRICTLY higher priority — equal-priority
+    arrivals wait their turn (no thrash)."""
+    cfg, params = smol
+    eng = Engine(cfg, params, ServeConfig(batch=1, max_len=32))
+    rng = np.random.default_rng(43)
+    eng.submit(Request(rng.integers(0, cfg.vocab, 5).astype(np.int32), 6,
+                       request_id=0, priority=2))
+    eng.step()
+    eng.submit(Request(rng.integers(0, cfg.vocab, 5).astype(np.int32), 4,
+                       request_id=1, priority=2))
+    while eng.step():
+        pass
+    assert eng.stats["preempted"] == 0
+    assert eng.pop_result(0).status == RequestStatus.FINISHED
+
+
+def test_pop_result_typed_and_array_like(smol):
+    """pop_result never raises: UNKNOWN for unseen/popped ids, a
+    non-consuming snapshot for live ids, a consuming terminal result
+    otherwise — and RequestResult quacks like the old raw token array."""
+    cfg, params = smol
+    eng = Engine(cfg, params, ServeConfig(batch=1, max_len=32))
+    assert eng.pop_result(7).status == RequestStatus.UNKNOWN
+    rng = np.random.default_rng(47)
+    eng.submit(Request(rng.integers(0, cfg.vocab, 5).astype(np.int32), 4,
+                       request_id=0))
+    snap = eng.pop_result(0)  # live: snapshot, not consumed
+    assert snap.status == RequestStatus.WAITING and len(snap) == 0
+    eng.step()
+    assert eng.pop_result(0).status == RequestStatus.ACTIVE
+    while eng.step():
+        pass
+    res = eng.pop_result(0)
+    assert res.status == RequestStatus.FINISHED
+    # array-likeness: everything the pre-lifecycle callers did still works
+    assert isinstance(res, RequestResult)
+    assert res.shape == (4,) and len(res) == 4
+    assert res.tolist() == list(res.tokens) and res[0] == res.tokens[0]
+    assert np.array_equal(np.asarray(res), res.tokens)
+    assert [int(t) for t in res] == res.tolist()
+    # consumed: the id is free again
+    assert eng.pop_result(0).status == RequestStatus.UNKNOWN
+    eng.submit(Request(rng.integers(0, cfg.vocab, 5).astype(np.int32), 2,
+                       request_id=0))
+    while eng.step():
+        pass
+    assert eng.pop_result(0).status == RequestStatus.FINISHED
+
+
+def test_serveconfig_lifecycle_validation():
+    with pytest.raises(ValueError, match="batch"):
+        ServeConfig(batch=0)
+    with pytest.raises(ValueError, match="max_waiting"):
+        ServeConfig(max_waiting=0)
+    with pytest.raises(ValueError, match="stall_patience"):
+        ServeConfig(stall_patience=0)
+    with pytest.raises(ValueError, match="num_blocks"):
+        ServeConfig(kv_layout="paged", max_len=64, block_size=16, num_blocks=1)
+    with pytest.raises(ValueError, match="num_blocks"):
+        ServeConfig(max_len=64, num_blocks=8)  # contiguous: meaningless
+    with pytest.raises(ValueError, match="decode_block"):
+        ServeConfig(
+            kv_layout="paged", max_len=64, block_size=16, decode_block=32
+        )
+    # pinning decode_block == block_size is the documented oracle idiom
+    ServeConfig(kv_layout="paged", max_len=64, block_size=16, decode_block=16)
 
 
 # ----------------------------------------------------- kvcache primitives --
