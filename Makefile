@@ -7,14 +7,16 @@ PY := PYTHONPATH=src python
 # pre-lint tree is only `ruff check`ed (see README.md §CI)
 FMT_PATHS := src/repro/serve benchmarks/serve_bench.py \
              benchmarks/check_regress.py tests/test_serve_engine.py \
-             tests/test_chaos.py
+             tests/test_chaos.py tests/test_recovery.py tests/conftest.py
 
 # acceptance matrix for the chaos suite (make test-chaos); override like
 # CHAOS_EPISODES=1 CHAOS_SEED=<seed> to replay one failing episode
 CHAOS_EPISODES ?= 200
+# crash-restart episodes are pricier (each compiles a fresh engine pair)
+RECOVERY_EPISODES ?= 6
 
-.PHONY: test test-fast test-fuzz test-chaos lint validate bench \
-        bench-mapper bench-simulate bench-dse bench-serve bench-check
+.PHONY: test test-fast test-fuzz test-chaos test-recovery lint validate \
+        bench bench-mapper bench-simulate bench-dse bench-serve bench-check
 
 # tier-1 verify: the full suite (matches ROADMAP.md)
 test:
@@ -24,7 +26,7 @@ test:
 # and chaos suites (CI runs those as their own named steps; `make test`
 # runs all, with the chaos suite at its small in-suite episode count)
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow and not fuzz and not chaos"
+	$(PY) -m pytest -x -q -m "not slow and not fuzz and not chaos and not recovery"
 
 # seeded randomized property suites (paged-KV differential traces, serve
 # fuzz).  Deterministic by default; crank locally with FUZZ_EXAMPLES=N
@@ -36,6 +38,12 @@ test-fuzz:
 # after every step against the unfaulted bitwise oracle
 test-chaos:
 	CHAOS_EPISODES=$(CHAOS_EPISODES) $(PY) -m pytest -q -m chaos
+
+# seeded crash-restart matrix (serve/recovery.py + serve/chaos.py): kill
+# the engine at a random step (sometimes corrupting the newest snapshot),
+# restore from snapshot + journal, and require bitwise oracle agreement
+test-recovery:
+	RECOVERY_EPISODES=$(RECOVERY_EPISODES) $(PY) -m pytest -q -m recovery
 
 lint:
 	ruff check .

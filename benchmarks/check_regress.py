@@ -4,10 +4,12 @@ Re-measures the PR-1 batched-pricing engine, the PR-2 vectorized
 simulator, the PR-3/4 serve engine (continuous-vs-static batching at
 equal slots, solo-bitwise outputs), the PR-5 paged KV layout
 (bitwise agreement with the contiguous oracle + the iso-memory
-shared-prefix concurrency win), and the PR-6 request-lifecycle fault
+shared-prefix concurrency win), the PR-6 request-lifecycle fault
 storm (zero leaked blocks, bitwise-stable survivors, preemptions all
-recovered, survivor ITL p95 within 1.25x of the no-fault baseline)
-on reduced budgets and compares against
+recovered, survivor ITL p95 within 1.25x of the no-fault baseline),
+and the PR-7 crash-recovery drill (snapshot-on ITL p95 within 1.10x
+of snapshot-off, restore+replay bitwise with zero mismatches and zero
+leaked blocks) on reduced budgets and compares against
 the committed BENCH_mapper.json / BENCH_simulate.json / BENCH_serve.json
 claims:
 
@@ -38,6 +40,22 @@ def _load(path: str) -> dict:
         sys.exit(f"missing committed benchmark file: {path}")
     with open(path) as f:
         return json.load(f)
+
+
+def _field(d: dict, path: str, src: str, regen: str):
+    """Walk a dotted ``path`` into a committed BENCH json, exiting with
+    the name of the first missing field (and the command that regenerates
+    the file) instead of a bare KeyError traceback."""
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            sys.exit(
+                f"{src} is missing field {path!r} (no {part!r}) — the "
+                f"committed benchmark predates this check; regenerate it "
+                f"with '{regen}'"
+            )
+        cur = cur[part]
+    return cur
 
 
 def _check(name: str, committed: float, fresh: float, tol: float) -> bool:
@@ -82,13 +100,16 @@ def main() -> None:
     mapper = _load(args.mapper_json)
     simulate = _load(args.simulate_json)
     serve = _load(args.serve_json)
+    mapper_f = lambda p: _field(mapper, p, args.mapper_json, "make bench-mapper")
+    sim_f = lambda p: _field(simulate, p, args.simulate_json, "make bench-simulate")
+    serve_f = lambda p: _field(serve, p, args.serve_json, "make bench-serve")
     if not simulate.get("bit_identical", False):
         sys.exit("committed BENCH_simulate.json lost bit_identical=true")
-    if not mapper["optimize_network"].get("identical_best", False):
+    if not mapper_f("optimize_network").get("identical_best", False):
         sys.exit("committed BENCH_mapper.json lost identical_best=true")
     if not serve.get("solo_outputs_identical", False):
         sys.exit("committed BENCH_serve.json lost solo_outputs_identical=true")
-    if serve["attention_ab"]["flash_vs_oracle_speedup"] < 1.0:
+    if serve_f("attention_ab.flash_vs_oracle_speedup") < 1.0:
         sys.exit(
             "committed BENCH_serve.json: flash-decoding slower than the "
             "masked-oracle attend path"
@@ -97,14 +118,14 @@ def main() -> None:
     # contiguous oracle, and the shared-prefix workload must keep its
     # iso-memory concurrency win (this ratio is deterministic scheduling,
     # not timing, so no noise tolerance applies)
-    if not serve["paged"]["agreement"]["bitwise_identical"]:
+    if not serve_f("paged.agreement.bitwise_identical"):
         sys.exit("committed BENCH_serve.json: paged != contiguous bitwise")
-    if not serve["paged"]["shared_prefix"]["bitwise_identical"]:
+    if not serve_f("paged.shared_prefix.bitwise_identical"):
         sys.exit(
             "committed BENCH_serve.json: shared-prefix paged outputs "
             "diverged from the contiguous oracle"
         )
-    if serve["paged"]["shared_prefix"]["admitted_concurrency_ratio"] < 1.5:
+    if serve_f("paged.shared_prefix.admitted_concurrency_ratio") < 1.5:
         sys.exit(
             "committed BENCH_serve.json: shared-prefix paged concurrency "
             "win below the 1.5x floor"
@@ -114,7 +135,7 @@ def main() -> None:
     # must not be badly degraded (ITL p95 within 1.25x of the no-fault
     # baseline — the one timing gate here, measured as a median of paired
     # back-to-back runs to shed scheduler noise)
-    storm = serve["fault_storm"]
+    storm = serve_f("fault_storm")
     if storm["leaked_blocks"] != 0:
         sys.exit(
             "committed BENCH_serve.json: fault storm leaked "
@@ -138,6 +159,37 @@ def main() -> None:
             f"(preemptions={storm['preemptions']}, "
             f"recovered={storm['recovered']})"
         )
+    # PR 7: durability must stay near-free (snapshot-on ITL p95 within
+    # 1.10x of snapshot-off — the one timing gate, checked against the
+    # committed JSON like the storm ceiling above), and the kill/restore
+    # drill must have replayed journaled tokens into bitwise-identical
+    # survivors without leaking a block
+    if serve_f("crash_recovery.overhead.snapshot_itl_p95_vs_off") > 1.10:
+        sys.exit(
+            "committed BENCH_serve.json: snapshot+journal ITL p95 "
+            f"{serve_f('crash_recovery.overhead.snapshot_itl_p95_vs_off'):.2f}x "
+            "the snapshot-off baseline (ceiling 1.10x)"
+        )
+    if serve_f("crash_recovery.recovery.tokens_replayed") < 1:
+        sys.exit(
+            "committed BENCH_serve.json: recovery drill replayed no "
+            "journaled tokens — the crash landed after a drain, so the "
+            "drill proved nothing"
+        )
+    if (
+        serve_f("crash_recovery.recovery.replay_mismatches") != 0
+        or not serve_f("crash_recovery.recovery.bitwise_survivors")
+    ):
+        sys.exit(
+            "committed BENCH_serve.json: restored run diverged from the "
+            "never-crashed oracle "
+            f"(mismatches={serve_f('crash_recovery.recovery.replay_mismatches')})"
+        )
+    if serve_f("crash_recovery.recovery.leaked_blocks") != 0:
+        sys.exit(
+            "committed BENCH_serve.json: recovery drill leaked "
+            f"{serve_f('crash_recovery.recovery.leaked_blocks')} KV blocks"
+        )
 
     failures = []
 
@@ -145,7 +197,7 @@ def main() -> None:
     fresh_rate = perf_compare.bench_pricing_rate()
     if not _check(
         "mapper pricing",
-        mapper["pricing"]["speedup"],
+        mapper_f("pricing.speedup"),
         fresh_rate["speedup"],
         args.tol,
     ):
@@ -154,15 +206,15 @@ def main() -> None:
     # PR 2: vectorized simulator (raises if it diverges from the odometer)
     with tempfile.TemporaryDirectory() as tmp:
         fresh_sim = perf_compare.run_simulate(os.path.join(tmp, "sim.json"), n=16)
-    if not _check("simulate", simulate["speedup"], fresh_sim["speedup"], args.tol):
+    if not _check("simulate", sim_f("speedup"), fresh_sim["speedup"], args.tol):
         failures.append("simulate")
 
     # PR 3/4: continuous-vs-static serve throughput at equal slots, on a
     # reduced workload; the fresh run re-asserts batched-equals-solo
     # bitwise sampling internally
     fresh_serve = serve_bench.run(
-        slots=serve["slots"],
-        max_len=serve["max_len"],
+        slots=serve_f("slots"),
+        max_len=serve_f("max_len"),
         n_requests=8,
         repeats=2,
         out_path=None,
@@ -170,12 +222,13 @@ def main() -> None:
         ab=False,
         paged=False,
         fault_storm=False,
+        crash_recovery=False,
     )
     if not fresh_serve["solo_outputs_identical"]:
         failures.append("serve solo-bitwise")
     if not _check(
         "serve continuous/static",
-        serve["speedup_tokens_per_s"],
+        serve_f("speedup_tokens_per_s"),
         fresh_serve["speedup_tokens_per_s"],
         args.serve_tol,
     ):
@@ -189,7 +242,7 @@ def main() -> None:
     from repro.arch.model_zoo import build
     from repro.configs.registry import get
 
-    cfg = get(serve["arch"])
+    cfg = get(serve_f("arch"))
     params = build(cfg).init(jax.random.PRNGKey(0))
     fresh_paged = serve_bench.bench_paged(
         cfg,
@@ -239,6 +292,31 @@ def main() -> None:
     )
     if not storm_ok:
         failures.append("fault-storm invariants")
+
+    # PR 7: fresh kill/restore drill on a reduced workload.  Only the
+    # exact invariants are gated (bitwise survivors, zero mismatches,
+    # zero leaked blocks, at least one journaled token replayed) — the
+    # ITL overhead ceiling is a timing claim and is checked against the
+    # committed JSON above, not a noisy shared CI runner.
+    fresh_cr = serve_bench.bench_crash_recovery(
+        cfg, params, slots=2, seed=0, n_requests=6, repeats=1
+    )
+    rec = fresh_cr["recovery"]
+    cr_ok = (
+        rec["replay_mismatches"] == 0
+        and rec["bitwise_survivors"]
+        and rec["leaked_blocks"] == 0
+        and rec["tokens_replayed"] >= 1
+    )
+    print(
+        f"[{'ok  ' if cr_ok else 'FAIL'}] crash recovery: "
+        f"source={rec['source']} replayed={rec['tokens_replayed']} "
+        f"mismatches={rec['replay_mismatches']} "
+        f"leaked={rec['leaked_blocks']} "
+        f"readmit={rec['recovery_time_to_readmit_ms']:.0f}ms"
+    )
+    if not cr_ok:
+        failures.append("crash-recovery invariants")
 
     if args.full:
         fresh_sweep = perf_compare.bench_network_sweep()

@@ -34,6 +34,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -523,6 +526,172 @@ def bench_fault_storm(
     }
 
 
+# ---------------------------------------------------- crash-recovery phase
+
+
+def bench_crash_recovery(
+    cfg,
+    params,
+    slots: int,
+    seed: int,
+    n_requests: int = 16,
+    max_len: int = 64,
+    block_size: int = 16,
+    overhead_snapshot_every: int = 32,
+    drill_snapshot_every: int = 8,
+    journal_fsync_every: int = 8,
+    # the overhead gate rides a p95-of-p95 ratio, so it takes the median
+    # of more pairs than the other phases to shed scheduler-noise tails
+    repeats: int = 5,
+) -> dict:
+    """Durability cost + recovery drill (serve/recovery.py).
+
+    **overhead**: paired A/B of the same engine config with and without
+    snapshots+journal at the shipped defaults (snapshot cadence 32, group
+    commit: journal flushed every step — process-crash safe — and fsync'd
+    every 8 — at most 8 steps of token deltas exposed to power loss;
+    client-visible submit/cancel/pop records always force a sync).
+    Reports the median per-pair survivor ITL p95 ratio — the steady-state
+    price of crash consistency.  Snapshots land on a RAM-backed fs when
+    available so the phase measures engine overhead, not the CI runner's
+    disk.
+
+    **recovery**: a simulated SIGKILL mid-run (snapshot published, journal
+    tail fsync'd, nothing closed), then a timed ``restore_engine`` and
+    teacher-forced replay until ``replay_lag`` hits zero — the
+    time-to-readmit a survivor.  The restored run must finish every
+    request bitwise-identical to a never-crashed run; ``replay_mismatches``
+    counts violations and must be zero."""
+    from repro.serve import recovery
+    from repro.serve.engine import Engine, RequestStatus, ServeConfig
+
+    ram = os.path.isdir("/dev/shm")
+    root = tempfile.mkdtemp(
+        prefix="repro_recovery_", dir="/dev/shm" if ram else None
+    )
+    common = dict(
+        batch=slots,
+        max_len=max_len,
+        seed=seed,
+        prefill_bucket=16,
+        kv_layout="paged",
+        block_size=block_size,
+    )
+    try:
+        # --- steady-state overhead ---------------------------------------
+        on = Engine(
+            cfg,
+            params,
+            ServeConfig(
+                snapshot_dir=os.path.join(root, "overhead"),
+                snapshot_every=overhead_snapshot_every,
+                journal_fsync_every=journal_fsync_every,
+                **common,
+            ),
+        )
+        off = Engine(cfg, params, ServeConfig(**common))
+        warm = make_workload(cfg.vocab, n_requests, seed, id_base=80_000)
+        on.run(list(warm))
+        off.run(list(warm))
+        pairs = []
+        for r in range(repeats):
+            a = _drive(
+                lambda rs, cb: on.run(rs, on_token=cb),
+                make_workload(cfg.vocab, n_requests, seed, id_base=81_000),
+            )
+            b = _drive(
+                lambda rs, cb: off.run(rs, on_token=cb),
+                make_workload(cfg.vocab, n_requests, seed, id_base=82_000),
+            )
+            a.pop("outputs")
+            b.pop("outputs")
+            pairs.append((a["itl_p95_ms"] / max(1e-9, b["itl_p95_ms"]), a, b))
+        pairs.sort(key=lambda p: p[0])
+        ratio, med_a, med_b = pairs[len(pairs) // 2]
+        keys = ("tokens_per_s", "itl_p50_ms", "itl_p95_ms")
+        overhead = {
+            "snap_on": {k: med_a[k] for k in keys},
+            "snap_off": {k: med_b[k] for k in keys},
+            "itl_p95_ratio_runs": [p[0] for p in pairs],
+            "snapshot_itl_p95_vs_off": ratio,
+            "snapshots_taken": int(on.stats["snapshots"]),
+        }
+        on.close()
+
+        # --- kill + timed restore drill ----------------------------------
+        reqs = make_workload(cfg.vocab, n_requests, seed)
+        want = {
+            r.request_id: o.tolist() for r, o in zip(reqs, off.run(list(reqs)))
+        }
+        scfg = ServeConfig(
+            snapshot_dir=os.path.join(root, "drill"),
+            snapshot_every=drill_snapshot_every,
+            **common,
+        )
+        eng = Engine(cfg, params, scfg)
+        for r in reqs:
+            eng.submit(r)
+        crash_step = drill_snapshot_every + drill_snapshot_every // 2
+        for _ in range(crash_step):
+            eng.step()
+        eng.recovery.wait()
+        # simulated SIGKILL: the engine object is simply abandoned
+
+        t0 = time.perf_counter()
+        eng2, report = recovery.restore_engine(cfg, params, scfg)
+        restore_s = time.perf_counter() - t0
+        lag0 = recovery.replay_lag(eng2)
+        t1 = time.perf_counter()
+        while recovery.replay_lag(eng2) > 0 and eng2.step():
+            pass
+        catchup_s = time.perf_counter() - t1
+        while eng2.step():
+            pass
+        finished = mismatches = 0
+        for r in reqs:
+            res = eng2.pop_result(r.request_id)
+            if (
+                res.status == RequestStatus.FINISHED
+                and res.tolist() == want[r.request_id]
+            ):
+                finished += 1
+            else:
+                mismatches += 1  # the drill injects no faults: all must land
+        leaked = eng2.pool.num_blocks - 1 - eng2.pool.free_blocks
+        eng2.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return {
+        "snapshot_dir_fs": "ram" if ram else "disk",
+        "overhead_snapshot_every": overhead_snapshot_every,
+        "drill_snapshot_every": drill_snapshot_every,
+        "journal_fsync_every": journal_fsync_every,
+        "repeats": repeats,
+        "overhead": overhead,
+        "recovery": {
+            "requests": n_requests,
+            "crash_step": crash_step,
+            "source": report.source,
+            "snapshot_key": (
+                None
+                if report.snapshot_key is None
+                else list(report.snapshot_key)
+            ),
+            "journal_segments": report.segments,
+            "journal_records": report.records,
+            "tokens_replayed": report.tokens_replayed,
+            "replay_lag_at_restore": lag0,
+            "restore_ms": restore_s * 1e3,
+            "replay_catchup_ms": catchup_s * 1e3,
+            "recovery_time_to_readmit_ms": (restore_s + catchup_s) * 1e3,
+            "finished": finished,
+            "replay_mismatches": mismatches,
+            "bitwise_survivors": mismatches == 0,
+            "leaked_blocks": leaked,
+        },
+    }
+
+
 # ------------------------------------------------- decode-step scaling phase
 
 
@@ -648,6 +817,7 @@ def run(
     ab: bool = True,
     paged: bool = True,
     fault_storm: bool = True,
+    crash_recovery: bool = True,
     # serving-sized cache for the substrate A/B: at the smoke models' tiny
     # dims the decode step is fixed-overhead dominated, so the oracle's
     # max_len scan only becomes visible at a real cache extent
@@ -765,6 +935,10 @@ def run(
         result["paged"] = bench_paged(cfg, params, slots, seed, n_requests)
     if fault_storm:
         result["fault_storm"] = bench_fault_storm(cfg, params, slots, seed)
+    if crash_recovery:
+        result["crash_recovery"] = bench_crash_recovery(
+            cfg, params, slots, seed
+        )
     if scaling:
         result["decode_step_scaling"] = bench_decode_scaling(
             cfg, params, slots, ab_max_len, seed
@@ -805,6 +979,20 @@ def run(
             f"itl p95 {fs['survivor_itl_p95_ms']:.1f}ms vs no-fault "
             f"{fs['baseline']['itl_p95_ms']:.1f}ms "
             f"({fs['survivor_itl_p95_vs_baseline']:.2f}x)"
+        )
+    if crash_recovery:
+        cr = result["crash_recovery"]
+        rec = cr["recovery"]
+        print(
+            f"crash-recovery: snapshot ITL p95 overhead "
+            f"{cr['overhead']['snapshot_itl_p95_vs_off']:.2f}x "
+            f"({cr['overhead']['snapshots_taken']} snapshots, "
+            f"{cr['snapshot_dir_fs']}) | restore from {rec['source']} in "
+            f"{rec['restore_ms']:.0f}ms + replay {rec['tokens_replayed']} "
+            f"toks in {rec['replay_catchup_ms']:.0f}ms | "
+            f"bitwise={rec['bitwise_survivors']} "
+            f"mismatches={rec['replay_mismatches']} "
+            f"leaked={rec['leaked_blocks']}"
         )
     if scaling:
         sc = result["decode_step_scaling"]
@@ -853,6 +1041,11 @@ def main():
         action="store_true",
         help="skip the request-lifecycle fault-storm phase",
     )
+    ap.add_argument(
+        "--no-crash-recovery",
+        action="store_true",
+        help="skip the snapshot-overhead + kill/restore drill phase",
+    )
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     run(
@@ -866,6 +1059,7 @@ def main():
         scaling=not args.no_scaling,
         paged=not args.no_paged,
         fault_storm=not args.no_fault_storm,
+        crash_recovery=not args.no_crash_recovery,
     )
 
 

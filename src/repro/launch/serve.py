@@ -6,6 +6,13 @@ Generates a mixed-length synthetic workload, streams tokens through the
 slot-based engine, and reports throughput plus per-token latency.  Pass
 ``--static`` to run the padded static-batch baseline instead (same workload,
 same slot count) for an A/B on the spot.
+
+Durability: ``--snapshot-dir DIR`` arms crash consistency (atomic engine
+snapshots every ``--snapshot-every`` steps plus a write-ahead journal,
+serve/recovery.py).  After a crash — try SIGKILL mid-run — relaunch with
+``--resume`` and the same flags: the engine restores from the newest valid
+snapshot, teacher-forces the journaled tokens back (bitwise identical to
+the never-crashed run), and finishes the in-flight requests.
 """
 
 from __future__ import annotations
@@ -83,9 +90,26 @@ def main():
     ap.add_argument("--deadline-steps", type=int, default=None,
                     help="per-request deadline in engine steps; expired "
                          "requests end FAILED with their partial output")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="arm crash consistency: atomic engine snapshots "
+                         "plus a write-ahead journal under this directory "
+                         "(created if missing); relaunch with --resume to "
+                         "recover after a crash")
+    ap.add_argument("--snapshot-every", type=int, default=32,
+                    help="steps between snapshots (journal records land "
+                         "every step regardless)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from --snapshot-dir instead of submitting "
+                         "a fresh workload: replay the journal, print the "
+                         "recovery report, and finish the in-flight requests")
     ap.add_argument("--static", action="store_true",
                     help="run the padded static-batch baseline instead")
     args = ap.parse_args()
+    if args.resume and not args.snapshot_dir:
+        ap.error("--resume requires --snapshot-dir")
+    if args.static and (args.snapshot_dir or args.resume):
+        ap.error("--snapshot-dir/--resume need the continuous engine "
+                 "(drop --static)")
 
     cfg = get(args.arch)
     model = build(cfg)
@@ -98,10 +122,7 @@ def main():
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefix_sharing=not args.no_prefix_sharing,
         max_waiting=args.max_waiting, stall_patience=args.stall_patience,
-    )
-    reqs = make_workload(
-        cfg, args.requests, args.new_tokens, args.seed,
-        deadline=args.deadline_steps,
+        snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
     )
 
     t0 = time.perf_counter()
@@ -110,10 +131,43 @@ def main():
     def on_token(rid, tok, idx, done):
         stamps.setdefault(rid, []).append(time.perf_counter() - t0)
 
-    if args.static:
+    if args.resume:
+        from repro.serve import recovery
+
+        eng, report = recovery.restore_engine(cfg, params, scfg)
+        print(
+            f"[resume] source={report.source} snapshot={report.snapshot_key} "
+            f"segments={report.segments} records={report.records} "
+            f"torn={report.torn_lines}"
+        )
+        print(
+            f"[resume] resubmitted={report.resubmitted} "
+            f"tokens_replayed={report.tokens_replayed} "
+            f"cancels={report.cancels} pops={report.pops} "
+            f"quarantined={report.quarantined or '[]'}"
+        )
+        n_reqs = len(eng._reqs)
+        rids = sorted(eng._reqs)
+        while eng.step(on_token):
+            pass
+        outs = [eng.pop_result(r) for r in rids]
+        eng.close()
+    elif args.static:
+        reqs = make_workload(
+            cfg, args.requests, args.new_tokens, args.seed,
+            deadline=args.deadline_steps,
+        )
+        n_reqs = len(reqs)
         outs = StaticEngine(cfg, params, scfg).generate(reqs, on_token=on_token)
     else:
-        outs = Engine(cfg, params, scfg).run(reqs, on_token=on_token)
+        reqs = make_workload(
+            cfg, args.requests, args.new_tokens, args.seed,
+            deadline=args.deadline_steps,
+        )
+        n_reqs = len(reqs)
+        eng = Engine(cfg, params, scfg)
+        outs = eng.run(reqs, on_token=on_token)
+        eng.close()
     dt = time.perf_counter() - t0
 
     total_new = sum(len(o) for o in outs)
@@ -125,9 +179,11 @@ def main():
     deltas.sort()
     p50 = deltas[len(deltas) // 2] if deltas else 0.0
     p95 = deltas[min(len(deltas) - 1, int(len(deltas) * 0.95))] if deltas else 0.0
-    mode = "static" if args.static else "continuous"
+    mode = (
+        "static" if args.static else "resume" if args.resume else "continuous"
+    )
     print(
-        f"[{mode}] served {len(reqs)} requests, {total_new} tokens, "
+        f"[{mode}] served {n_reqs} requests, {total_new} tokens, "
         f"{dt:.2f}s ({total_new / dt:.1f} tok/s, "
         f"per-token p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms)"
     )

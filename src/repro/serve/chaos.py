@@ -38,16 +38,66 @@ unfaulted run is bitwise ground truth for any faulted interleaving.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
-from repro.serve import kvcache
+from repro.serve import kvcache, recovery
 from repro.serve.engine import (
     TERMINAL_STATUSES,
     Engine,
     Request,
     RequestStatus,
+    ServeConfig,
 )
+
+# the test matrices draw episode seeds as <env seed> + SEED_STRIDE + episode,
+# so a failed episode's exact repro is <env var>=1 CHAOS_SEED=<seed - STRIDE>
+SEED_STRIDE = 1000
+
+
+def env_int(name: str, default: int) -> int:
+    """Parse an integer knob from the environment, rejecting garbage with
+    an actionable message instead of a bare int() traceback."""
+    raw = os.environ.get(name)
+    if raw is None or not raw.strip():
+        return default
+    try:
+        return int(raw.strip(), 10)
+    except ValueError:
+        raise ValueError(
+            f"environment variable {name}={raw!r} is not an integer "
+            f"(expected e.g. {name}={default})"
+        ) from None
+
+
+def repro_command(
+    seed: int,
+    episodes_var: str = "CHAOS_EPISODES",
+    target: str = "test-chaos",
+) -> str:
+    """The exact shell command that replays one episode of the seeded
+    matrix (episode seeds are ``CHAOS_SEED + SEED_STRIDE + ep``)."""
+    return f"{episodes_var}=1 CHAOS_SEED={seed - SEED_STRIDE} make {target}"
+
+
+def episode_header(
+    kind: str,
+    seed: int,
+    episodes_var: str = "CHAOS_EPISODES",
+    target: str = "test-chaos",
+) -> str:
+    """Print (and return) the episode banner: seed, the generator's initial
+    internal state (proof the episode is a pure function of the seed), and
+    the one-line repro command a CI failure should be rerun with."""
+    state = np.random.default_rng(seed).bit_generator.state["state"]["state"]
+    cmd = repro_command(seed, episodes_var, target)
+    print(
+        f"[chaos] {kind} episode seed={seed} "
+        f"pcg64_state={state:#x} repro: {cmd}",
+        flush=True,
+    )
+    return cmd
 
 
 @dataclasses.dataclass
@@ -70,6 +120,9 @@ class ChaosConfig:
     p_priority: float = 0.3       # per-request: non-zero priority (1..3)
     burst_hi: int = 4             # submissions per step upper bound
     max_steps: int = 1000         # drain bound (fail = livelock)
+    # crash-episode knobs (run_crash_episode only)
+    p_pop: float = 0.15           # per-step: client pops a terminal result
+    crash_hi: int = 24            # crash step drawn from [1, crash_hi]
 
 
 @dataclasses.dataclass
@@ -200,6 +253,7 @@ def run_episode(
     assert not eng._reqs and not eng._slots and not eng._waiting, (
         "chaos episode needs a drained engine"
     )
+    episode_header("fault", seed)
     rng = np.random.default_rng(seed)
     stats0 = dict(eng.stats)  # engines are reused: report per-episode deltas
     pending = list(rng.permutation(len(reqs)))
@@ -285,4 +339,201 @@ def run_episode(
         steps=steps,
         statuses=statuses,
         stats={k: v - stats0.get(k, 0) for k, v in eng.stats.items()},
+    )
+
+
+# ---------------------------------------------------------- crash episodes --
+@dataclasses.dataclass
+class CrashEpisodeReport:
+    """One kill-and-restore episode: where it crashed, what recovery found,
+    and the post-restore outcome distribution."""
+
+    seed: int
+    crash_step: int               # simulated-kill step (0 = drained first)
+    steps: int                    # total engine steps across both lives
+    source: str                   # restore source: snapshot | cold | fresh
+    statuses: dict[str, int]
+    stats: dict[str, int]         # restored engine's lifecycle counters
+    tokens_replayed: int
+    quarantined: int              # snapshots renamed *.corrupt at restore
+    popped_pre_crash: int
+    corrupted: bool               # episode flipped bytes in newest snapshot
+
+
+def corrupt_newest_snapshot(directory: str) -> bool:
+    """Flip one byte inside the newest published snapshot's npz (simulating
+    disk rot / torn sector), so restore must quarantine it and fall back.
+    Returns False when no snapshot has been published yet."""
+    keys = recovery._snapshot_keys(directory)
+    if not keys:
+        return False
+    npz = os.path.join(directory, recovery._snap_name(*keys[-1]), "state.npz")
+    with open(npz, "r+b") as f:
+        f.seek(0, os.SEEK_END)
+        pos = min(128, f.tell() - 1)
+        f.seek(pos)
+        byte = f.read(1)
+        f.seek(pos)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    return True
+
+
+def run_crash_episode(
+    cfg,
+    params,
+    scfg: ServeConfig,
+    oracle: dict[int, list[int]],
+    reqs: list[Request],
+    seed: int,
+    ccfg: ChaosConfig,
+    p_corrupt: float = 0.25,
+) -> CrashEpisodeReport:
+    """One seeded kill-and-restore episode.  Phase 1 drives a fresh
+    durable engine through the standard fault schedule (cancels,
+    preemptions, block-pressure spikes, client result pops) until a
+    seed-drawn crash step, then simulates a process kill: the engine is
+    abandoned mid-flight — nothing is flushed beyond what the journal
+    already fsync'd — and (with probability ``p_corrupt``) the newest
+    snapshot's bytes are flipped to exercise quarantine fallback.  Phase 2
+    restores from disk, audits ownership after every step while the same
+    fault schedule continues, and asserts the run_episode endgame: zero
+    leaked blocks and bitwise oracle agreement for every request —
+    including results the client popped before the crash, which must NOT
+    be resurrected by recovery."""
+    assert scfg.snapshot_dir, "crash episodes need scfg.snapshot_dir"
+    cmd = episode_header("crash", seed, "RECOVERY_EPISODES", "test-recovery")
+    rng = np.random.default_rng(seed)
+    eng = Engine(cfg, params, scfg)
+    pending = list(rng.permutation(len(reqs)))
+    rids = [r.request_id for r in reqs]
+    spikes: list[tuple[list[int], int]] = []
+    popped: dict[int, object] = {}
+    steps = 0
+    crash_step = int(rng.integers(1, ccfg.crash_hi + 1))
+
+    def live(engine, statuses):
+        return [r for r in rids if engine.status(r) in statuses]
+
+    def drive(engine, stop_at):
+        nonlocal steps
+        while pending or engine._slots or engine._waiting:
+            if stop_at is not None and steps >= stop_at:
+                return
+            for _ in range(int(rng.integers(0, ccfg.burst_hi + 1))):
+                if pending:
+                    engine.submit(reqs[pending.pop(0)])
+            if rng.random() < ccfg.p_cancel:
+                victims = live(
+                    engine,
+                    (
+                        RequestStatus.WAITING,
+                        RequestStatus.ACTIVE,
+                        RequestStatus.PREEMPTED,
+                    ),
+                )
+                if victims:
+                    engine.cancel(victims[int(rng.integers(len(victims)))])
+            if rng.random() < ccfg.p_preempt:
+                actives = live(engine, (RequestStatus.ACTIVE,))
+                if actives:
+                    engine.preempt(actives[int(rng.integers(len(actives)))])
+            if engine.pool is not None and rng.random() < ccfg.p_spike:
+                held = engine.pool.reserve(
+                    int(rng.integers(1, ccfg.spike_blocks + 1))
+                )
+                if held:
+                    expiry = steps + int(rng.integers(1, ccfg.spike_steps + 1))
+                    spikes.append((held, expiry))
+            engine.step()
+            steps += 1
+            for held, expiry in [s for s in spikes if s[1] <= steps]:
+                engine.pool.unreserve(held)
+                spikes.remove((held, expiry))
+            if rng.random() < ccfg.p_pop:
+                done = [
+                    r
+                    for r in live(engine, TERMINAL_STATUSES)
+                    if r not in popped
+                ]
+                if done:
+                    rid = done[int(rng.integers(len(done)))]
+                    popped[rid] = engine.pop_result(rid)
+            audit(engine)
+            assert steps < ccfg.max_steps, (
+                f"crash episode seed={seed} failed to drain in {steps} "
+                f"steps (livelock); repro: {cmd}"
+            )
+
+    drive(eng, crash_step)
+    crashed_mid_flight = bool(pending or eng._slots or eng._waiting)
+    # --- simulated kill: let the in-flight background snapshot publish
+    # (the daemon thread shares our process and would finish anyway), then
+    # abandon the engine without closing — the journal's fsync-per-step
+    # contract is exactly what a real SIGKILL leaves behind.
+    eng.recovery.wait()
+    eng.recovery.journal._f.close()  # crash drops the fd, not the bytes
+    corrupted = rng.random() < p_corrupt and corrupt_newest_snapshot(
+        scfg.snapshot_dir
+    )
+    del eng
+    spikes.clear()  # reserve holders died with the process
+
+    eng2, report = recovery.restore_engine(cfg, params, scfg)
+    audit(eng2)
+    if corrupted:
+        assert report.quarantined, (
+            f"crash episode seed={seed}: corrupted newest snapshot was not "
+            f"quarantined (restore source={report.source}); repro: {cmd}"
+        )
+    for rid in popped:
+        assert eng2.status(rid) == RequestStatus.UNKNOWN, (
+            f"crash episode seed={seed}: rid {rid} was popped before the "
+            f"crash but recovery resurrected it; repro: {cmd}"
+        )
+    drive(eng2, None)
+    for held, _ in spikes:
+        eng2.pool.unreserve(held)
+    spikes.clear()
+    audit(eng2)
+    if eng2.pool is not None:
+        assert eng2.pool.free_blocks == eng2.pool.num_blocks - 1, (
+            f"crash episode seed={seed} leaked "
+            f"{eng2.pool.num_blocks - 1 - eng2.pool.free_blocks} blocks "
+            f"across the crash; repro: {cmd}"
+        )
+
+    statuses: dict[str, int] = {}
+    results = dict(popped)
+    for r in reqs:
+        if r.request_id not in results:
+            results[r.request_id] = eng2.pop_result(r.request_id)
+    for r in reqs:
+        res = results[r.request_id]
+        statuses[res.status.value] = statuses.get(res.status.value, 0) + 1
+        want = oracle[r.request_id]
+        got = res.tolist()
+        if res.status == RequestStatus.FINISHED:
+            assert got == want, (
+                f"crash episode seed={seed} rid {r.request_id} "
+                f"(preemptions={res.preemptions}, restore={report.source}): "
+                f"FINISHED output {got} != oracle {want}; repro: {cmd}"
+            )
+        else:
+            assert got == want[: len(got)], (
+                f"crash episode seed={seed} rid {r.request_id} "
+                f"({res.status}, restore={report.source}): partial output "
+                f"{got} is not a prefix of oracle {want}; repro: {cmd}"
+            )
+    eng2.close()
+    return CrashEpisodeReport(
+        seed=seed,
+        crash_step=crash_step if crashed_mid_flight else 0,
+        steps=steps,
+        source=report.source,
+        statuses=statuses,
+        stats=dict(eng2.stats),
+        tokens_replayed=report.tokens_replayed,
+        quarantined=len(report.quarantined),
+        popped_pre_crash=len(popped),
+        corrupted=corrupted,
     )

@@ -82,6 +82,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import enum
+import warnings
 from collections import deque
 from typing import Any, Callable
 
@@ -239,6 +240,36 @@ class ServeConfig:
     # REJECTED — the engine degrades loudly instead of livelocking on a
     # pool that will never free (external pressure, accounting bugs).
     stall_patience: int = 64
+    # crash consistency (serve/recovery.py): a directory here arms the
+    # RecoveryManager — a crc32'd write-ahead journal of submits/cancels/
+    # pops/token deltas (fsync'd once per step) plus a crash-atomic
+    # snapshot of the full serving state every `snapshot_every` steps,
+    # staged synchronously and published tmp-dir+rename on a background
+    # thread.  restore_engine() rebuilds a crashed engine with survivor
+    # outputs bitwise identical to the never-crashed run.
+    snapshot_dir: str | None = None
+    snapshot_every: int = 32
+    snapshot_keep: int = 3           # published snapshots retained by GC
+    # fsync the journal every N per-step commits (submit/cancel/pop always
+    # force a sync).  1 = classic WAL durability; raise it when the journal
+    # lives on a slow disk and losing a few steps of tokens is acceptable.
+    journal_fsync_every: int = 1
+    # corruption quarantine: per-step NaN/Inf guard on decode logits — a
+    # non-finite row FAILs (blocks released, survivors untouched) instead
+    # of silently streaming garbage.  Costs nothing: the flag rides the
+    # existing device->host token sync.
+    guard_nan: bool = True
+    # paged-only debug/detection mode: per-physical-block checksums
+    # recomputed each step; an unexpected change in a block no live row
+    # legally wrote quarantines every request referencing it (FAILED,
+    # blocks released).  O(pool) device work per step — off by default.
+    kv_checksum: bool = False
+    # one-shot kernel-failure fallback: if the jitted decode path raises
+    # (Pallas lowering/compile failure on an exotic backend), rebuild it on
+    # the oracle substrate (flash -> masked xla; paged -> gather twin) with
+    # a logged warning instead of dying.  Greedy outputs are substrate-
+    # independent (tests pin this), so serving continues bitwise-intact.
+    substrate_fallback: bool = True
 
     def __post_init__(self):
         # every mis-setting here used to surface as a downstream shape
@@ -274,6 +305,24 @@ class ServeConfig:
         if self.stall_patience < 1:
             raise ValueError(
                 f"stall_patience must be >= 1 step: {self.stall_patience}"
+            )
+        if self.snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1 step: {self.snapshot_every}"
+            )
+        if self.snapshot_keep < 1:
+            raise ValueError(
+                f"snapshot_keep must be >= 1 snapshot: {self.snapshot_keep}"
+            )
+        if self.journal_fsync_every < 1:
+            raise ValueError(
+                f"journal_fsync_every must be >= 1 commit: "
+                f"{self.journal_fsync_every}"
+            )
+        if self.kv_checksum and self.kv_layout != "paged":
+            raise ValueError(
+                "kv_checksum tracks per-physical-block sums, which only "
+                "exist under kv_layout='paged'"
             )
         if self.decode_block is not None and self.decode_block < 1:
             raise ValueError(f"decode_block must be >= 1: {self.decode_block}")
@@ -418,34 +467,14 @@ class Engine:
             "expired": 0,
             "rejected": 0,
             "shed": 0,
+            "quarantined": 0,   # corruption guard: rows FAILED mid-decode
+            "fallbacks": 0,     # substrate fallbacks taken (0 or 1)
+            "snapshots": 0,     # recovery snapshots staged
         }
 
         model, impl, axes = self.model, self._impl, self._axes
-        attn = self._attn
         max_len = scfg.max_len
-        dblk = scfg.decode_block
-        key0 = jax.random.PRNGKey(scfg.seed)
-        temp = scfg.temperature
-
-        def sample_one(logits: jax.Array, key: jax.Array) -> jax.Array:
-            if temp <= 0:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return jax.random.categorical(key, logits / temp).astype(jnp.int32)
-
-        def req_key(rid: jax.Array, t: jax.Array) -> jax.Array:
-            return jax.random.fold_in(jax.random.fold_in(key0, rid), t)
-
-        def decode_fn(params, toks, caches, rids, ts):
-            with (
-                L.matmul_override(impl),
-                L.attention_override(attn),
-                L.decode_block_override(dblk),
-            ):
-                logits, caches = model.decode_step(params, toks, caches)
-            nxt = jax.vmap(lambda lg, r, t: sample_one(lg, req_key(r, t)))(
-                logits, rids, ts
-            )
-            return nxt, caches
+        sample_one, req_key = self._sampler()
 
         def admit_fn(params, toks, big, slots_, rids, true_lens):
             """Fused admission: prefill `n` prompts (right-padded rows mask
@@ -491,7 +520,8 @@ class Engine:
         # to the jit output, so the consumed input is never read again.
         # The paged helpers follow the same contract: pack/set/CoW are
         # donated scatters into the pool, never pool copies.
-        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+        self._decode = self._make_decode(self._attn)
+        self._fallback_done = False
         self._admit_group = jax.jit(admit_fn, donate_argnums=(2,))
         self._paged_prefill = jax.jit(paged_prefill_fn)
         self._pack_row = jax.jit(kvcache.paged_store_row_blocks, donate_argnums=(0,))
@@ -501,6 +531,112 @@ class Engine:
             self._sink_row = np.zeros((scfg.max_len // scfg.block_size,), np.int32)
         else:
             self._sink_row = None
+
+        # optional per-physical-block checksum audit (paged only): host
+        # mirror of |kpool|+|vpool| sums per block, verified after every
+        # step against the blocks legally written that step
+        self._kv_sums: np.ndarray | None = None
+        self._pool_sums = None
+        self._touched: set[int] = set()
+        if scfg.kv_checksum:
+
+            def pool_sums_fn(caches):
+                k = jnp.sum(
+                    jnp.abs(caches["kpool"].astype(jnp.float32)),
+                    axis=(0, 2, 3, 4),
+                )
+                v = jnp.sum(
+                    jnp.abs(caches["vpool"].astype(jnp.float32)),
+                    axis=(0, 2, 3, 4),
+                )
+                return k + v
+
+            self._pool_sums = jax.jit(pool_sums_fn)
+            self._refresh_kv_sums()
+
+        # crash consistency: journal + periodic snapshots (serve/recovery)
+        self.recovery = None
+        if scfg.snapshot_dir:
+            from repro.serve.recovery import RecoveryManager
+
+            RecoveryManager.attach(
+                self,
+                scfg.snapshot_dir,
+                every=scfg.snapshot_every,
+                keep=scfg.snapshot_keep,
+                fsync_every=scfg.journal_fsync_every,
+            )
+
+    def _sampler(self):
+        key0 = jax.random.PRNGKey(self.scfg.seed)
+        temp = self.scfg.temperature
+
+        def sample_one(logits: jax.Array, key: jax.Array) -> jax.Array:
+            if temp <= 0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(key, logits / temp).astype(jnp.int32)
+
+        def req_key(rid: jax.Array, t: jax.Array) -> jax.Array:
+            return jax.random.fold_in(jax.random.fold_in(key0, rid), t)
+
+        return sample_one, req_key
+
+    def _make_decode(self, attn):
+        """Build the jitted decode program on substrate ``attn`` (rebuilt
+        once by `_decode_call` on kernel failure).  Besides the sampled
+        tokens it returns a per-row non-finite-logits flag — the
+        corruption guard rides the token sync, costing no extra transfer.
+        """
+        model, impl, dblk = self.model, self._impl, self.scfg.decode_block
+        sample_one, req_key = self._sampler()
+
+        def decode_fn(params, toks, caches, rids, ts):
+            with (
+                L.matmul_override(impl),
+                L.attention_override(attn),
+                L.decode_block_override(dblk),
+            ):
+                logits, caches = model.decode_step(params, toks, caches)
+            nxt = jax.vmap(lambda lg, r, t: sample_one(lg, req_key(r, t)))(
+                logits, rids, ts
+            )
+            bad = ~jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+            return (nxt, bad), caches
+
+        return jax.jit(decode_fn, donate_argnums=(2,))
+
+    def _decode_call(self, *args):
+        """Run the decode program, falling back ONCE to the oracle
+        substrate on failure (flash -> masked xla attend; paged -> the
+        gather twin, both reached by rebuilding with ``attn=None``).
+        Pallas kernel failures surface at trace/compile time — before the
+        donated caches are consumed — so the retry sees intact buffers."""
+        try:
+            return self._decode(*args)
+        except Exception as e:
+            if (
+                self._fallback_done
+                or not self.scfg.substrate_fallback
+                or self._attn is None
+            ):
+                raise
+            warnings.warn(
+                f"decode substrate {self._attn!r} failed ({type(e).__name__}: "
+                f"{e}); falling back to the oracle substrate once",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            self._fallback_done = True
+            self._attn = None
+            self._decode = self._make_decode(None)
+            self.stats["fallbacks"] += 1
+            return self._decode(*args)
+
+    def _refresh_kv_sums(self) -> None:
+        """(Re)baseline the per-block checksum mirror from the current
+        device pools — at init and after a snapshot restore."""
+        if self._pool_sums is not None:
+            self._kv_sums = np.asarray(self._pool_sums(self.caches))
 
     # ---------------------------------------------------------- admission --
     def submit(self, req: Request) -> int:
@@ -556,8 +692,7 @@ class Engine:
         self._outputs[rid] = []
         if budget <= 0 or len(prompt) == 0:
             self._finish(info, RequestStatus.FINISHED, "empty prompt or budget")
-            return rid
-        if (
+        elif (
             self.scfg.max_waiting is not None
             and len(self._waiting) >= self.scfg.max_waiting
         ):
@@ -567,8 +702,12 @@ class Engine:
                 RequestStatus.REJECTED,
                 f"queue full (max_waiting={self.scfg.max_waiting})",
             )
-            return rid
-        self._enqueue(info)
+        else:
+            self._enqueue(info)
+        if self.recovery is not None:
+            # journaled AFTER the outcome is known: the record carries the
+            # terminal-at-submit status too, so replay needs no re-validation
+            self.recovery.record_submit(info)
         return rid
 
     def _enqueue(self, info: _ReqInfo) -> None:
@@ -735,6 +874,11 @@ class Engine:
                 cow_dst=cow_dst,
             )
             self._rows[slot] = row
+            if self._kv_sums is not None:
+                # checksum mode: admission packs (or aliases) these blocks
+                # this step; aliased prefix blocks are untouched on device
+                # but marking them is a harmless over-approximation
+                self._touched.update(row.blocks)
             lpad = self._bucket_len(plen)
             groups.setdefault(lpad, []).append((info, slot, row))
 
@@ -790,6 +934,8 @@ class Engine:
                 jnp.int32(row.cow_dst),
             )
             self.pool.release(src)
+            if self._kv_sums is not None:
+                self._touched.add(row.cow_dst)
             row.blocks[lb] = row.cow_dst
             row.cow_dst = None
             row.tail_shared = False
@@ -858,6 +1004,8 @@ class Engine:
             self._waiting.remove(rid)
         self.stats["cancelled"] += 1
         self._finish(info, RequestStatus.CANCELLED, reason)
+        if self.recovery is not None:
+            self.recovery.record_cancel(rid, reason)
         return RequestStatus.CANCELLED
 
     def preempt(self, rid: int) -> bool:
@@ -939,13 +1087,62 @@ class Engine:
                 return
             self.preempt(victims[0][2])
 
+    # ---------------------------------------------------------- integrity --
+    def _quarantine(self, slot: int, reason: str) -> None:
+        """Corruption response: FAIL the request in ``slot`` and release
+        its resources through the ordinary eviction path — pool invariants
+        hold and the other rows never notice (slot rows are
+        computationally independent)."""
+        info = self._reqs[self._slots[slot].rid]
+        self._release_slot(slot)
+        self.stats["quarantined"] += 1
+        self._finish(info, RequestStatus.FAILED, reason)
+
+    def _audit_kv_checksums(self) -> None:
+        """kv_checksum mode: recompute per-physical-block sums and compare
+        against last step's mirror.  A block that changed without a legal
+        write this step (``self._touched``) is corrupt: every request
+        referencing it is quarantined.  NaN sums compare equal to
+        themselves here, so an already-quarantined poisoned block does not
+        re-fire once it sits idle in the free list."""
+        sums = np.asarray(self._pool_sums(self.caches))
+        prev = self._kv_sums
+        changed = (sums != prev) & ~(np.isnan(sums) & np.isnan(prev))
+        if self._touched:
+            changed[list(self._touched)] = False
+        for b in np.nonzero(changed)[0]:
+            b = int(b)
+            owners = [
+                s
+                for s, row in self._rows.items()
+                if b in row.blocks or row.cow_dst == b
+            ]
+            for s in owners:
+                if s in self._slots:
+                    self._quarantine(
+                        s,
+                        f"KV corruption: block {b} checksum changed "
+                        f"without a write",
+                    )
+        self._kv_sums = sums
+
     # -------------------------------------------------------------- drive --
     def step(self, on_token: TokenCallback | None = None) -> bool:
         """One engine iteration: expire deadlines, preempt for starved
         higher-priority arrivals, backfill free slots from the queue, then
         advance every occupied slot by one decode token.  Returns False
-        once the engine is idle."""
+        once the engine is idle.  When a RecoveryManager is attached, the
+        step's emitted-token deltas are journaled (and a snapshot staged on
+        cadence) before control returns — the crash-durability boundary is
+        the end of every step."""
+        alive = self._step_core(on_token)
+        if self.recovery is not None:
+            self.recovery.after_step()
+        return alive
+
+    def _step_core(self, on_token: TokenCallback | None) -> bool:
         self._step_no += 1
+        self._touched = {kvcache.SINK_BLOCK}
         self._expire_deadlines()
         self._preempt_pass()
         admitted = False
@@ -986,7 +1183,15 @@ class Engine:
         ts = np.zeros((B,), np.int32)
         for s, st in self._slots.items():
             rids[s], ts[s] = st.rid, st.emitted
-        nxt, self.caches = self._decode(
+        if self._kv_sums is not None:
+            # the one block each live row legally appends to this step:
+            # decode writes KV at position plen + emitted - 1 (the first
+            # generated token's KV lands on the next step's feed)
+            bs = self.scfg.block_size
+            for s, st in self._slots.items():
+                row = self._rows[s]
+                self._touched.add(row.blocks[(row.plen + st.emitted - 1) // bs])
+        (nxt, bad), self.caches = self._decode_call(
             self.params,
             jnp.asarray(self._cur_tok[:, None]),
             self.caches,
@@ -994,7 +1199,15 @@ class Engine:
             jnp.asarray(ts),
         )
         nxt = np.asarray(nxt)
+        bad = np.asarray(bad)
         self._cur_tok = nxt.copy()
+        if self.scfg.guard_nan and bad.any():
+            # quarantine BEFORE emission: a poisoned row's sampled token is
+            # garbage and must reach neither the output nor the journal
+            for s in [s for s in sorted(self._slots) if bad[s]]:
+                self._quarantine(
+                    s, "non-finite logits: KV/activation corruption"
+                )
 
         finished = []
         for s in sorted(self._slots):
@@ -1012,6 +1225,12 @@ class Engine:
                     f"{st.emitted} ({tok} != recorded {out[st.emitted]})"
                 )
                 st.emitted += 1
+                if st.emitted >= st.budget:
+                    # crash recovery can replay a request to COMPLETION
+                    # (it finished after the last snapshot): the journaled
+                    # final token re-derives here and no fresh emission
+                    # remains to trigger the ordinary finish path below
+                    finished.append((s, st.rid))
                 continue
             out.append(tok)
             st.emitted += 1
@@ -1026,6 +1245,8 @@ class Engine:
                 continue  # the done-callback already cancelled it
             self._release_slot(s)  # backfilled at the next step
             self._finish(self._reqs[rid], RequestStatus.FINISHED, "")
+        if self._kv_sums is not None:
+            self._audit_kv_checksums()
         return True
 
     def pop_result(self, rid: int) -> RequestResult:
@@ -1047,6 +1268,8 @@ class Engine:
         if info.status in TERMINAL_STATUSES:
             del self._reqs[rid]
             del self._outputs[rid]
+            if self.recovery is not None:
+                self.recovery.record_pop(rid)
         return result
 
     def run(
@@ -1066,6 +1289,14 @@ class Engine:
     # legacy API (PR-2-era callers): identical signature, continuous core
     def generate(self, requests: list[Request]) -> list[RequestResult]:
         return self.run(requests)
+
+    def close(self) -> None:
+        """Flush and close the recovery journal (no-op without durability).
+        Simulated crashes skip this on purpose — every journal record is
+        already fsync'd at the step boundary that produced it."""
+        if self.recovery is not None:
+            self.recovery.close()
+            self.recovery = None
 
 
 class StaticEngine:

@@ -463,6 +463,37 @@ class BlockPool:
             return shared, None
         return shared, self.index.get((prev, tuple(tail)))
 
+    def to_state(self) -> dict:
+        """JSON-serializable snapshot of the full ownership state, prefix
+        index included — the recovery manager embeds this in the engine
+        snapshot manifest so a restored pool keeps aliasing the restored
+        device blocks."""
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "refcount": list(self.refcount),
+            "free": list(self.free),
+            "external": sorted(self.external),
+            "index": [
+                [prev, list(tokens), bid]
+                for (prev, tokens), bid in self.index.items()
+            ],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "BlockPool":
+        """Rebuild a pool from :meth:`to_state` output (``_keys_of`` is
+        re-derived from the index)."""
+        pool = cls(int(state["num_blocks"]), int(state["block_size"]))
+        pool.refcount = [int(c) for c in state["refcount"]]
+        pool.free = [int(b) for b in state["free"]]
+        pool.external = {int(b) for b in state["external"]}
+        pool.index = {}
+        pool._keys_of = {}
+        for prev, tokens, bid in state["index"]:
+            pool.register(int(prev), tuple(int(t) for t in tokens), int(bid))
+        return pool
+
     def assert_invariants(self, live_refs: dict[int, int]) -> None:
         """``live_refs``: physical block -> reference count derived from
         the engine's live rows.  Raises on any ownership drift."""

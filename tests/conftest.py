@@ -4,6 +4,8 @@ import os
 
 import pytest
 
+from repro.serve.chaos import env_int
+
 
 @pytest.fixture(autouse=True, scope="session")
 def _isolated_tile_cache(tmp_path_factory):
@@ -15,22 +17,38 @@ def _isolated_tile_cache(tmp_path_factory):
         os.environ["REPRO_TILE_CACHE"] = str(path)
 
 
+def _env_int(name: str, default: int) -> int:
+    """Env-knob parsing that fails as a usage error (one clear line, no
+    traceback) when someone exports CHAOS_EPISODES=lots."""
+    try:
+        return env_int(name, default)
+    except ValueError as e:
+        raise pytest.UsageError(str(e)) from None
+
+
 def fuzz_examples(default: int) -> int:
     """Example count for the seeded randomized (``fuzz``-marked) suites:
     ``default`` in CI (fixed seeds keep runs reproducible), cranked locally
     via ``FUZZ_EXAMPLES=N make test-fuzz``."""
-    return int(os.environ.get("FUZZ_EXAMPLES", default))
+    return _env_int("FUZZ_EXAMPLES", default)
 
 
 def chaos_episodes(default: int) -> int:
     """Episode count for the ``chaos``-marked fault-injection suites: a
     small ``default`` inside the full test run, cranked to the acceptance
     matrix by ``make test-chaos`` (CHAOS_EPISODES=200)."""
-    return int(os.environ.get("CHAOS_EPISODES", default))
+    return _env_int("CHAOS_EPISODES", default)
+
+
+def recovery_episodes(default: int) -> int:
+    """Episode count for the ``recovery``-marked crash-restart suites;
+    smaller defaults than chaos (each episode compiles a fresh engine
+    pair), cranked by ``make test-recovery`` (RECOVERY_EPISODES)."""
+    return _env_int("RECOVERY_EPISODES", default)
 
 
 def chaos_seed() -> int:
     """Base seed for the chaos episode matrix; CI runs the named chaos
     step once per CHAOS_SEED value, so episodes never repeat across the
     matrix while every failure reproduces from its printed seed."""
-    return int(os.environ.get("CHAOS_SEED", 0))
+    return _env_int("CHAOS_SEED", 0)

@@ -12,11 +12,13 @@ CHAOS_SEED.  Any failure prints the episode seed; replay it locally with
 ``CHAOS_EPISODES=1 CHAOS_SEED=<seed> make test-chaos``.
 """
 
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
 
-from conftest import chaos_episodes, chaos_seed
+from conftest import chaos_episodes, chaos_seed, recovery_episodes
 from repro.arch.model_zoo import build
 from repro.configs.registry import get
 from repro.serve import chaos
@@ -151,6 +153,73 @@ def test_chaos_episode_replays_identically(smol):
 
     a, b = once(), once()
     assert (a.steps, a.statuses, a.stats) == (b.steps, b.statuses, b.stats)
+
+
+@pytest.mark.recovery
+def test_crash_restart_episode_matrix(smol, tmp_path):
+    """Kill-and-restore chaos: every episode builds a durable engine
+    (snapshot + journal on disk), drives it through the standard fault
+    schedule, simulates a process kill at a seed-drawn step (sometimes
+    also flipping bytes in the newest snapshot), restores, and finishes
+    the workload — auditing ownership every step and requiring bitwise
+    oracle agreement for every surviving request.  Default episode count
+    is small (each episode compiles a fresh engine pair); CI cranks it
+    via ``make test-recovery`` (RECOVERY_EPISODES) across the CHAOS_SEED
+    matrix."""
+    cfg, params = smol
+    common = dict(
+        batch=3, max_len=MAX_LEN, temperature=0.7, seed=5, prefill_bucket=16
+    )
+    paged = dict(kv_layout="paged", block_size=BS, **common)
+    durable = dict(snapshot_every=4, snapshot_keep=2)
+    setups = [
+        ("paged-ample", ServeConfig(stall_patience=6, **paged, **durable)),
+        (
+            "paged-starved",
+            ServeConfig(
+                num_blocks=12,
+                stall_patience=4,
+                max_waiting=8,
+                **paged,
+                **durable,
+            ),
+        ),
+        ("contiguous", ServeConfig(stall_patience=6, **common, **durable)),
+    ]
+    oracle_eng = Engine(
+        cfg, params, ServeConfig(attention="flash", decode_block=BS, **common)
+    )
+    n = recovery_episodes(2)
+    base = chaos_seed()
+    ccfg = chaos.ChaosConfig()
+    reports = []
+    for ep in range(n):
+        name, scfg = setups[ep % len(setups)]
+        seed = base + 1000 + ep
+        rng = np.random.default_rng(seed)
+        reqs = chaos.make_chaos_workload(rng, cfg.vocab, MAX_LEN, ccfg)
+        oracle = chaos.oracle_outputs(oracle_eng, reqs)
+        scfg = dataclasses.replace(
+            scfg, snapshot_dir=str(tmp_path / f"ep{ep:03d}")
+        )
+        reports.append(
+            chaos.run_crash_episode(
+                cfg, params, scfg, oracle, reqs, seed, ccfg
+            )
+        )
+    assert all(r.steps > 0 for r in reports)
+    assert any(r.source in ("snapshot", "cold") for r in reports), (
+        "no episode ever restored anything"
+    )
+    finished = sum(r.statuses.get("FINISHED", 0) for r in reports)
+    assert finished > 0, "no request ever survived a crash"
+    if n >= 3:
+        assert any(r.source == "snapshot" for r in reports), (
+            "no episode restored from a snapshot"
+        )
+        assert any(r.tokens_replayed > 0 for r in reports), (
+            "no episode replayed journaled tokens"
+        )
 
 
 @pytest.mark.chaos

@@ -477,6 +477,56 @@ def test_block_pool_refcount_drift_detected():
     pool.assert_invariants({})
 
 
+def test_block_pool_reserve_unreserve_accounting():
+    """The external-hold contract pinned directly: partial grants when the
+    pool runs dry, holds invisible to engine refs but accounted by the
+    invariant check, and double-/never-reserved unreserves rejected."""
+    pool = kvcache.BlockPool(6, 4)
+    held = pool.reserve(3)
+    assert len(held) == 3 and set(held) <= set(range(1, 6))
+    assert pool.free_blocks == 2
+    pool.assert_invariants({})  # external holds aren't engine-owned refs
+    more = pool.reserve(10)  # drier than asked: partial grant, no raise
+    assert len(more) == 2 and pool.free_blocks == 0
+    assert pool.reserve(1) == []  # bone dry: empty grant
+    pool.unreserve(more)
+    assert pool.free_blocks == 2
+    with pytest.raises(AssertionError, match="non-reserved"):
+        pool.unreserve(more)  # double-unreserve must not double-free
+    with pytest.raises(AssertionError, match="non-reserved"):
+        pool.unreserve([kvcache.SINK_BLOCK])  # sink is never reservable
+    engine_owned = pool.alloc()
+    with pytest.raises(AssertionError, match="non-reserved"):
+        pool.unreserve([engine_owned])  # engine refs can't exit via holds
+    pool.release(engine_owned)
+    pool.unreserve(held)
+    assert pool.free_blocks == 5
+    pool.assert_invariants({})
+
+
+def test_block_pool_state_roundtrip_json():
+    """to_state/from_state rebuild refcounts, free order, external holds,
+    and the radix index — through a JSON encode, since the recovery
+    manifest embeds the state as JSON."""
+    import json
+
+    pool = kvcache.BlockPool(8, 4)
+    a, b = pool.alloc(), pool.alloc()
+    pool.register(-1, (1, 2, 3, 4), a)
+    pool.register(a, (5, 6), b)
+    pool.retain(b)
+    pool.reserve(2)
+    clone = kvcache.BlockPool.from_state(
+        json.loads(json.dumps(pool.to_state()))
+    )
+    assert clone.refcount == pool.refcount
+    assert clone.free == pool.free  # order matters: pop() parity
+    assert clone.external == pool.external
+    assert clone.index == pool.index
+    assert clone.match_prefix([1, 2, 3, 4, 5, 6]) == ([a], b)
+    clone.assert_invariants({a: 1, b: 2})
+
+
 # ------------------------------------------------------- serve-engine fuzz --
 
 

@@ -532,3 +532,41 @@ def test_supports_padded_prefill_matrix():
     assert not kvcache.supports_padded_prefill(get("gemma3-12b-smoke"))
     assert not kvcache.supports_padded_prefill(get("rwkv6-1.6b-smoke"))
     assert not kvcache.supports_padded_prefill(get("granite-moe-1b-a400m-smoke"))
+
+
+# ------------------------------------------------- RequestResult protocol --
+
+
+def test_request_result_array_protocol():
+    """Legacy-caller compatibility contract: pre-lifecycle code treated
+    pop_result's return as a raw token array, so the typed result must
+    keep behaving like one."""
+    toks = np.asarray([5, 9, 2], np.int32)
+    res = RequestResult(RequestStatus.FINISHED, toks, reason="", preemptions=1)
+    # __array__: dtype passthrough, dtype coercion, and copy semantics
+    arr = np.asarray(res)
+    assert arr.dtype == np.int32 and np.array_equal(arr, toks)
+    assert np.asarray(res, np.int64).dtype == np.int64
+    copied = np.array(res, copy=True)
+    copied[0] = -1
+    assert res.tokens[0] == 5, "__array__(copy=True) must not alias tokens"
+    # sized/iterable/indexable surface
+    assert len(res) == 3
+    assert list(res) == [5, 9, 2]
+    assert res[1] == 9 and res[-1] == 2
+    assert res.shape == (3,)
+    assert res.tolist() == [5, 9, 2] and type(res.tolist()[0]) is int
+    # elementwise ordering dunders, the `(out >= 0).all()` idiom
+    assert (res >= 0).all() and not (res < 0).any()
+    assert np.array_equal(res > 4, [True, True, False])
+    assert np.array_equal(res <= 5, [True, False, True])
+    assert np.array_equal(res, toks)
+
+
+def test_request_result_empty_and_numpy_interop():
+    res = RequestResult(RequestStatus.REJECTED, np.zeros((0,), np.int32))
+    assert len(res) == 0 and res.tolist() == [] and res.shape == (0,)
+    assert (res >= 0).all()  # vacuous truth, but must not raise
+    full = RequestResult(RequestStatus.FINISHED, np.asarray([1, 2], np.int32))
+    assert int(np.sum(full)) == 3  # reductions go through __array__
+    assert np.concatenate([full, full]).tolist() == [1, 2, 1, 2]
