@@ -15,7 +15,8 @@ CHAOS_EPISODES ?= 200
 # crash-restart episodes are pricier (each compiles a fresh engine pair)
 RECOVERY_EPISODES ?= 6
 
-.PHONY: test test-fast test-fuzz test-chaos test-recovery lint validate \
+.PHONY: test test-fast test-fuzz test-chaos test-recovery test-scheduler \
+        lint validate \
         bench bench-mapper bench-simulate bench-dse bench-serve bench-check
 
 # tier-1 verify: the full suite (matches ROADMAP.md)
@@ -38,6 +39,15 @@ test-fuzz:
 # after every step against the unfaulted bitwise oracle
 test-chaos:
 	CHAOS_EPISODES=$(CHAOS_EPISODES) $(PY) -m pytest -q -m chaos
+
+# unified-scheduler differentials by name: chunked prefill bitwise vs the
+# monolithic oracle, PREFILLING observability, mid-prefill preemption /
+# cancel / deadline recovery, and the nested-ServeConfig migration shim —
+# CI runs this before the full suite so a scheduler regression is named
+# in its own step (the same tests also run inside test/test-fast)
+test-scheduler:
+	$(PY) -m pytest -q tests/test_serve_engine.py \
+		-k "chunk or prefill or nested or flat_kwargs or priority"
 
 # seeded crash-restart matrix (serve/recovery.py + serve/chaos.py): kill
 # the engine at a random step (sometimes corrupting the newest snapshot),

@@ -7,11 +7,15 @@ equal slots, solo-bitwise outputs), the PR-5 paged KV layout
 shared-prefix concurrency win), the PR-6 request-lifecycle fault
 storm (zero leaked blocks, bitwise-stable survivors, preemptions all
 recovered, survivor ITL p95 within 1.25x of the no-fault baseline),
-and the PR-7 crash-recovery drill (snapshot-on ITL p95 within 1.10x
+the PR-7 crash-recovery drill (snapshot-on ITL p95 within 1.10x
 of snapshot-off, restore+replay bitwise with zero mismatches and zero
-leaked blocks) on reduced budgets and compares against
-the committed BENCH_mapper.json / BENCH_simulate.json / BENCH_serve.json
-claims:
+leaked blocks), and the PR-8 unified-scheduler admission storm
+(chunked prefill cuts interactive TTFT p95 >= 2x vs monolithic
+admission while decoder ITL p95 stays within 1.15x of storm-free,
+bitwise identical to the monolithic oracle with zero leaked blocks
+and at least one mid-prefill lane preemption) on reduced budgets and
+compares against the committed BENCH_mapper.json /
+BENCH_simulate.json / BENCH_serve.json claims:
 
     PYTHONPATH=src python -m benchmarks.check_regress [--full] [--tol 0.15]
 
@@ -190,6 +194,42 @@ def main() -> None:
             "committed BENCH_serve.json: recovery drill leaked "
             f"{serve_f('crash_recovery.recovery.leaked_blocks')} KV blocks"
         )
+    # PR 8: the unified scheduler's admission storm must keep its headline
+    # trade — interactive TTFT p95 cut at least 2x vs monolithic admission
+    # while the decode ring's ITL p95 stays within 1.15x of the storm-free
+    # baseline (both timing gates read from the committed JSON, measured
+    # against wall-clock arrivals on the machine that generated it) — and
+    # its exact invariants: bitwise identity with the monolithic oracle,
+    # zero leaked blocks, and at least one mid-prefill lane preemption
+    # (the priority takeover path must actually fire under the storm)
+    adm = serve_f("admission_storm")
+    if not adm["bitwise_identical_to_monolithic"]:
+        sys.exit(
+            "committed BENCH_serve.json: chunked admission-storm outputs "
+            "diverged from the monolithic oracle"
+        )
+    if adm["leaked_blocks"] != 0:
+        sys.exit(
+            "committed BENCH_serve.json: admission storm leaked "
+            f"{adm['leaked_blocks']} KV blocks"
+        )
+    if adm["lane_preemptions"] < 1:
+        sys.exit(
+            "committed BENCH_serve.json: admission storm never preempted "
+            "the prefill lane — the priority takeover path went unexercised"
+        )
+    if adm["ttft_p95_speedup"] < 2.0:
+        sys.exit(
+            "committed BENCH_serve.json: chunked interactive TTFT p95 only "
+            f"{adm['ttft_p95_speedup']:.2f}x better than monolithic "
+            "admission (floor 2.0x)"
+        )
+    if adm["itl_p95_vs_storm_free"] > 1.15:
+        sys.exit(
+            "committed BENCH_serve.json: chunked-storm decoder ITL p95 "
+            f"{adm['itl_p95_vs_storm_free']:.2f}x the storm-free baseline "
+            "(ceiling 1.15x)"
+        )
 
     failures = []
 
@@ -223,6 +263,7 @@ def main() -> None:
         paged=False,
         fault_storm=False,
         crash_recovery=False,
+        admission_storm=False,
     )
     if not fresh_serve["solo_outputs_identical"]:
         failures.append("serve solo-bitwise")
@@ -317,6 +358,43 @@ def main() -> None:
     )
     if not cr_ok:
         failures.append("crash-recovery invariants")
+
+    # PR 8: fresh admission storm on a reduced schedule.  Only the exact
+    # invariants are gated (chunked outputs bitwise equal to the
+    # monolithic oracle, zero leaked blocks) — the TTFT/ITL gates are
+    # timing claims checked against the committed JSON above, and lane
+    # preemption needs full-scale wall-clock overlap (a toy bulk prefill
+    # drains between arrivals), so it too is a committed-JSON gate.
+    fresh_adm = serve_bench.bench_admission_storm(
+        cfg,
+        params,
+        seed=0,
+        slots=4,
+        max_len=128,
+        n_decoders=3,
+        ramp_steps=12,
+        n_bulk=2,
+        bulk_prompt=40,
+        bulk_new=3,
+        inter_offsets=(0.0, 0.1),
+        inter_new=4,
+        prefill_chunk=8,
+        window=60,
+        mono_window=40,
+        repeats=1,
+    )
+    adm_ok = (
+        fresh_adm["bitwise_identical_to_monolithic"]
+        and fresh_adm["leaked_blocks"] == 0
+    )
+    print(
+        f"[{'ok  ' if adm_ok else 'FAIL'}] admission storm: "
+        f"bitwise={fresh_adm['bitwise_identical_to_monolithic']} "
+        f"leaked={fresh_adm['leaked_blocks']} "
+        f"lane_preemptions={fresh_adm['lane_preemptions']}"
+    )
+    if not adm_ok:
+        failures.append("admission-storm invariants")
 
     if args.full:
         fresh_sweep = perf_compare.bench_network_sweep()

@@ -18,26 +18,34 @@ import jax
 from repro.arch.model_zoo import build
 from repro.configs.registry import get
 from repro.serve import recovery
-from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.engine import (
+    DurabilityConfig,
+    Engine,
+    Request,
+    SchedulerConfig,
+    ServeConfig,
+)
 
 
 def main():
     cfg = get("smollm-360m-smoke")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, ServeConfig(batch=4, max_len=128))
+    engine = Engine(
+        cfg, params,
+        ServeConfig(max_len=128, scheduler=SchedulerConfig(batch=4)),
+    )
 
     rng = np.random.default_rng(0)
     requests = [
-        Request(rng.integers(0, cfg.vocab, n).astype(np.int32),
-                max_new_tokens=m)
+        Request(rng.integers(0, cfg.vocab, n).astype(np.int32), max_new=m)
         for n, m in ((5, 8), (12, 16), (3, 4))
     ]
     # a deadline-bound request: FAILs with its partial output if it cannot
     # finish within 6 engine steps
     requests.append(
         Request(rng.integers(0, cfg.vocab, 6).astype(np.int32),
-                max_new_tokens=24, deadline_steps=6)
+                max_new=24, deadline_steps=6)
     )
 
     def on_token(rid, tok, idx, done):
@@ -57,7 +65,37 @@ def main():
         res = engine.pop_result(rid)  # typed: (status, tokens, reason, ...)
         why = f" ({res.reason})" if res.reason else ""
         print(f"request {rid}: prompt_len={len(requests[i].prompt)} "
-              f"status={res.status.value}{why} generated={res.tolist()}")
+              f"status={res.status.value}{why} ttft_steps={res.ttft_steps} "
+              f"generated={res.tolist()}")
+
+    # ---- unified scheduler: chunked prefill interleaved with decode -------
+    # prefill_chunk tiles each admission prefill into fixed-size chunks and
+    # token_budget caps how many prefill tokens advance per step, so decode
+    # latency stays flat while long prompts trickle in.  With the budget
+    # unset and chunk >= prompt it degenerates to monolithic admission —
+    # outputs are bitwise identical either way.
+    print("\n--- unified scheduler (chunked prefill) demo ---")
+    chunked = Engine(
+        cfg, params,
+        ServeConfig(
+            max_len=128,
+            scheduler=SchedulerConfig(
+                batch=4, prefill_chunk=16, token_budget=16
+            ),
+        ),
+    )
+    long_prompt = rng.integers(0, cfg.vocab, 100).astype(np.int32)
+    rid = chunked.submit(Request(long_prompt, max_new=4))
+    while True:
+        alive = chunked.step()
+        status = chunked.status(rid).value
+        if status == "PREFILLING":
+            print(f"  req{rid} PREFILLING (16-token chunks under budget)")
+        if not alive:
+            break
+    res = chunked.pop_result(rid)
+    print(f"request {rid}: status={res.status.value} "
+          f"ttft_steps={res.ttft_steps} generated={res.tolist()}")
 
     # ---- kill and resume: crash-consistent serving (serve/recovery.py) ----
     # A snapshot_dir arms durability: atomic snapshots every snapshot_every
@@ -67,11 +105,17 @@ def main():
     # identical to a run that never crashed.
     print("\n--- crash / resume demo ---")
     snapdir = tempfile.mkdtemp(prefix="serve_lm_snap_")
-    base = dict(batch=4, max_len=128, temperature=0.8, seed=7)
-    scfg = ServeConfig(snapshot_dir=snapdir, snapshot_every=4, **base)
+    base = dict(
+        max_len=128, temperature=0.8, seed=7,
+        scheduler=SchedulerConfig(batch=4),
+    )
+    scfg = ServeConfig(
+        durability=DurabilityConfig(snapshot_dir=snapdir, snapshot_every=4),
+        **base,
+    )
     requests = [
         Request(rng.integers(0, cfg.vocab, n).astype(np.int32),
-                max_new_tokens=m, request_id=100 + i)
+                max_new=m, request_id=100 + i)
         for i, (n, m) in enumerate(((6, 12), (9, 16), (4, 10)))
     ]
     # sampling folds in (request_id, position) only, so a plain engine with
@@ -79,7 +123,7 @@ def main():
     oracle = {r.request_id: o.tolist()
               for r, o in zip(requests, Engine(cfg, params,
                                                ServeConfig(**base)).run(
-                  [Request(r.prompt, max_new_tokens=r.max_new_tokens,
+                  [Request(r.prompt, max_new=r.max_new,
                            request_id=r.request_id) for r in requests]))}
 
     doomed = Engine(cfg, params, scfg)

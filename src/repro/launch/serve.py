@@ -25,7 +25,16 @@ import numpy as np
 
 from repro.arch.model_zoo import build
 from repro.configs.registry import get
-from repro.serve.engine import Engine, Request, ServeConfig, StaticEngine
+from repro.serve.engine import (
+    DurabilityConfig,
+    Engine,
+    KernelConfig,
+    KVConfig,
+    Request,
+    SchedulerConfig,
+    ServeConfig,
+    StaticEngine,
+)
 
 
 def make_workload(
@@ -35,7 +44,7 @@ def make_workload(
     return [
         Request(
             rng.integers(0, cfg.vocab, rng.integers(3, 16)).astype(np.int32),
-            max_new_tokens=int(rng.integers(max(2, max_new // 4), max_new + 1)),
+            max_new=int(rng.integers(max(2, max_new // 4), max_new + 1)),
             request_id=i,
             deadline_steps=deadline,
         )
@@ -87,6 +96,16 @@ def main():
                     help="consecutive no-progress idle steps before the "
                          "watchdog sheds the queue head instead of "
                          "livelocking")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="unified scheduler: split admission prefills into "
+                         "fixed chunks of this many tokens and interleave "
+                         "them with decode steps (0 = monolithic admission, "
+                         "the bitwise oracle; max-len must be a multiple)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max prefill tokens advanced per engine step "
+                         "(requires --prefill-chunk; default unlimited). "
+                         "Lower budgets flatten decode ITL under admission "
+                         "storms at the cost of TTFT")
     ap.add_argument("--deadline-steps", type=int, default=None,
                     help="per-request deadline in engine steps; expired "
                          "requests end FAILED with their partial output")
@@ -115,14 +134,21 @@ def main():
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     scfg = ServeConfig(
-        batch=args.slots, max_len=args.max_len,
-        temperature=args.temperature, seed=args.seed,
-        prefill_bucket=args.prefill_bucket, matmul=args.matmul,
-        attention=args.attention, kv_layout=args.kv_layout,
-        block_size=args.block_size, num_blocks=args.num_blocks,
-        prefix_sharing=not args.no_prefix_sharing,
-        max_waiting=args.max_waiting, stall_patience=args.stall_patience,
-        snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
+        max_len=args.max_len, temperature=args.temperature, seed=args.seed,
+        scheduler=SchedulerConfig(
+            batch=args.slots, prefill_bucket=args.prefill_bucket,
+            prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
+            max_waiting=args.max_waiting, stall_patience=args.stall_patience,
+        ),
+        kv=KVConfig(
+            layout=args.kv_layout, block_size=args.block_size,
+            num_blocks=args.num_blocks,
+            prefix_sharing=not args.no_prefix_sharing,
+        ),
+        kernel=KernelConfig(matmul=args.matmul, attention=args.attention),
+        durability=DurabilityConfig(
+            snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
+        ),
     )
 
     t0 = time.perf_counter()

@@ -166,11 +166,25 @@ def audit(eng: Engine) -> None:
     queued = set(eng._waiting)
     active = {st.rid for st in eng._slots.values()}
     assert not queued & active, f"rids both queued and active: {queued & active}"
+    prefilling = set()
+    if eng._lane is not None:
+        prefilling = {eng._lane.rid}
+        assert eng._lane.slot not in eng._slots, (
+            f"lane slot {eng._lane.slot} double-booked by an active row"
+        )
+        assert eng._lane.slot not in eng._free, (
+            f"lane slot {eng._lane.slot} still on the free ring"
+        )
+        assert not prefilling & (queued | active), (
+            f"rid {eng._lane.rid} PREFILLING but also scheduled elsewhere"
+        )
     for rid, info in eng._reqs.items():
         if info.status in (RequestStatus.WAITING, RequestStatus.PREEMPTED):
             assert rid in queued, f"rid {rid} {info.status} but not queued"
         elif info.status == RequestStatus.ACTIVE:
             assert rid in active, f"rid {rid} ACTIVE but holds no slot"
+        elif info.status == RequestStatus.PREFILLING:
+            assert rid in prefilling, f"rid {rid} PREFILLING but holds no lane"
         else:
             assert info.status in TERMINAL_STATUSES
             assert rid not in queued and rid not in active, (
@@ -250,9 +264,10 @@ def run_episode(
     episodes — it must enter drained; compiled programs amortize).  Audits
     ownership after every step, then asserts leak-free drain and bitwise
     oracle agreement for every request."""
-    assert not eng._reqs and not eng._slots and not eng._waiting, (
-        "chaos episode needs a drained engine"
-    )
+    assert (
+        not eng._reqs and not eng._slots and not eng._waiting
+        and eng._lane is None
+    ), "chaos episode needs a drained engine"
     episode_header("fault", seed)
     rng = np.random.default_rng(seed)
     stats0 = dict(eng.stats)  # engines are reused: report per-episode deltas
@@ -264,7 +279,7 @@ def run_episode(
     def live(statuses):
         return [r for r in rids if eng.status(r) in statuses]
 
-    while pending or eng._slots or eng._waiting:
+    while pending or eng._slots or eng._waiting or eng._lane is not None:
         for _ in range(int(rng.integers(0, ccfg.burst_hi + 1))):
             if pending:
                 eng.submit(reqs[pending.pop(0)])
@@ -274,6 +289,7 @@ def run_episode(
                 (
                     RequestStatus.WAITING,
                     RequestStatus.ACTIVE,
+                    RequestStatus.PREFILLING,
                     RequestStatus.PREEMPTED,
                 )
             )
@@ -287,7 +303,7 @@ def run_episode(
                 assert eng.cancel(rid) == before, "double-cancel not idempotent"
                 assert eng.status(rid) == before
         if rng.random() < ccfg.p_preempt:
-            actives = live((RequestStatus.ACTIVE,))
+            actives = live((RequestStatus.ACTIVE, RequestStatus.PREFILLING))
             if actives:
                 eng.preempt(actives[int(rng.integers(len(actives)))])
         if eng.pool is not None and rng.random() < ccfg.p_spike:
@@ -416,7 +432,10 @@ def run_crash_episode(
 
     def drive(engine, stop_at):
         nonlocal steps
-        while pending or engine._slots or engine._waiting:
+        while (
+            pending or engine._slots or engine._waiting
+            or engine._lane is not None
+        ):
             if stop_at is not None and steps >= stop_at:
                 return
             for _ in range(int(rng.integers(0, ccfg.burst_hi + 1))):
@@ -428,13 +447,16 @@ def run_crash_episode(
                     (
                         RequestStatus.WAITING,
                         RequestStatus.ACTIVE,
+                        RequestStatus.PREFILLING,
                         RequestStatus.PREEMPTED,
                     ),
                 )
                 if victims:
                     engine.cancel(victims[int(rng.integers(len(victims)))])
             if rng.random() < ccfg.p_preempt:
-                actives = live(engine, (RequestStatus.ACTIVE,))
+                actives = live(
+                    engine, (RequestStatus.ACTIVE, RequestStatus.PREFILLING)
+                )
                 if actives:
                     engine.preempt(actives[int(rng.integers(len(actives)))])
             if engine.pool is not None and rng.random() < ccfg.p_spike:
@@ -465,7 +487,9 @@ def run_crash_episode(
             )
 
     drive(eng, crash_step)
-    crashed_mid_flight = bool(pending or eng._slots or eng._waiting)
+    crashed_mid_flight = bool(
+        pending or eng._slots or eng._waiting or eng._lane is not None
+    )
     # --- simulated kill: let the in-flight background snapshot publish
     # (the daemon thread shares our process and would finish anyway), then
     # abandon the engine without closing — the journal's fsync-per-step

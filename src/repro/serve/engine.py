@@ -106,6 +106,7 @@ class RequestStatus(str, enum.Enum):
     has never seen (or whose results were already popped)."""
 
     WAITING = "WAITING"       # queued, not yet admitted
+    PREFILLING = "PREFILLING"  # chunked prefill mid-flight: holds a slot
     ACTIVE = "ACTIVE"         # holds a slot (and, paged, blocks)
     PREEMPTED = "PREEMPTED"   # evicted mid-generation, requeued for recovery
     FINISHED = "FINISHED"     # ran to its token budget
@@ -143,6 +144,9 @@ class RequestResult:
     tokens: np.ndarray
     reason: str = ""
     preemptions: int = 0
+    # steps from submit to the first emitted token (None until it streams;
+    # survives into the terminal result for SLO accounting)
+    ttft_steps: int | None = None
 
     def __array__(self, dtype=None, copy=None):
         arr = np.asarray(self.tokens, dtype)
@@ -179,10 +183,16 @@ class RequestResult:
         return np.asarray(self.tokens) >= other
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True, eq=False, init=False)
 class Request:
+    """One unit of work for :meth:`Engine.submit` — frozen, so a request
+    enqueued on one thread can never be mutated under the engine.  The
+    second positional slot stays the max-new-token count it has always
+    been; ``max_new_tokens=`` is kept as a keyword alias so every
+    pre-redesign caller survives unchanged."""
+
     prompt: np.ndarray           # (T,) int32
-    max_new_tokens: int = 16
+    max_new: int = 16
     # stable id for deterministic sampling; defaults to submission order
     request_id: int | None = None
     # higher priority admits first and may preempt strictly-lower-priority
@@ -191,32 +201,125 @@ class Request:
     # engine steps (not wall clock, so chaos/CI replays are deterministic)
     # the request may participate in before it FAILs; None = no deadline
     deadline_steps: int | None = None
+    # per-request sampling seed; None inherits ServeConfig.seed (the
+    # default computes bit-identical keys to the pre-redesign engine)
+    seed: int | None = None
+    # per-request streaming callback, invoked in addition to the step-level
+    # one; not journaled (callbacks are not durable state)
+    on_token: TokenCallback | None = None
+
+    def __init__(
+        self,
+        prompt,
+        max_new: int | None = None,
+        request_id: int | None = None,
+        priority: int = 0,
+        deadline_steps: int | None = None,
+        seed: int | None = None,
+        on_token: TokenCallback | None = None,
+        *,
+        max_new_tokens: int | None = None,
+    ):
+        if max_new_tokens is not None:
+            if max_new is not None:
+                raise TypeError(
+                    "pass the token budget positionally (max_new) or as "
+                    "max_new_tokens=, not both"
+                )
+            max_new = max_new_tokens
+        object.__setattr__(self, "prompt", prompt)
+        object.__setattr__(self, "max_new", 16 if max_new is None else int(max_new))
+        object.__setattr__(self, "request_id", request_id)
+        object.__setattr__(self, "priority", priority)
+        object.__setattr__(self, "deadline_steps", deadline_steps)
+        object.__setattr__(self, "seed", seed)
+        object.__setattr__(self, "on_token", on_token)
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.max_new
 
 
-@dataclasses.dataclass
-class ServeConfig:
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission + step-loop scheduling knobs (frozen; validation runs at
+    construction so invalid combos fail eagerly, next to the fields)."""
+
     batch: int = 4               # number of KV slots (decode batch width)
-    max_len: int = 256
-    temperature: float = 0.0
-    seed: int = 0
-    # >0: right-pad prompts to a multiple of this so prefill compiles once
-    # per bucket, not once per length (global-attention models only; other
-    # families silently fall back to exact-length prefill)
+    # >0: right-pad prompts to a multiple of this so monolithic prefill
+    # compiles once per bucket, not once per length (global-attention
+    # models only; other families fall back to exact-length prefill)
     prefill_bucket: int = 0
-    # "xla" | "pallas": route projection GEMMs through the Pallas kernel
-    # with mapper-chosen tiles (core.mapper.choose_matmul_tiles)
-    matmul: str = "xla"
-    # "flash" | "xla": decode-attention substrate.  "flash" (default) is
-    # the ragged flash-decoding path (per-slot live lengths, KV reads
-    # scale with live length); "xla" is the masked dense/blockwise oracle.
-    attention: str = "flash"
+    # >0: token-level unified scheduler — prompts stream into KV through a
+    # batch-1 scratch lane in fixed chunks of this many tokens, interleaved
+    # with decode steps.  0 (default) keeps monolithic fused admission,
+    # which is the chunked scheduler's bitwise differential oracle.
+    prefill_chunk: int = 0
+    # chunked only: max prefill tokens advanced per engine step
+    # (token_budget // prefill_chunk chunks).  None = unlimited, which
+    # degenerates to whole-prompt admission within one step.
+    token_budget: int | None = None
+    # bound the waiting queue: a submit that would exceed it is REJECTED
+    # immediately (load shedding) instead of growing the queue without
+    # bound.  None = unbounded.
+    max_waiting: int | None = None
+    # watchdog: consecutive steps with zero active slots and zero admission
+    # progress (while requests wait) before the head of the queue is shed
+    # REJECTED — the engine degrades loudly instead of livelocking on a
+    # pool that will never free (external pressure, accounting bugs).
+    stall_patience: int = 64
+    # False: pure FIFO — priority ordering, priority preemption, and
+    # chunk-granular prefill takeover are all disabled
+    priorities: bool = True
+
+    def __post_init__(self):
+        if self.batch < 1:
+            raise ValueError(f"batch (KV slot count) must be >= 1: {self.batch}")
+        if self.prefill_bucket < 0:
+            raise ValueError(
+                f"prefill_bucket must be >= 0 (0 disables bucketing): "
+                f"{self.prefill_bucket}"
+            )
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0 (0 = monolithic admission): "
+                f"{self.prefill_chunk}"
+            )
+        if self.token_budget is not None:
+            if self.prefill_chunk == 0:
+                raise ValueError(
+                    f"token_budget={self.token_budget} only takes effect "
+                    f"with chunked prefill; set prefill_chunk > 0 or drop "
+                    f"token_budget"
+                )
+            if self.token_budget < self.prefill_chunk:
+                raise ValueError(
+                    f"token_budget ({self.token_budget}) must cover at "
+                    f"least one prefill_chunk ({self.prefill_chunk}) per "
+                    f"step, or admission livelocks"
+                )
+        if self.max_waiting is not None and self.max_waiting < 1:
+            raise ValueError(
+                f"max_waiting must be >= 1 (or None for unbounded): "
+                f"{self.max_waiting}"
+            )
+        if self.stall_patience < 1:
+            raise ValueError(
+                f"stall_patience must be >= 1 step: {self.stall_patience}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class KVConfig:
+    """KV-cache layout + paged-pool knobs."""
+
     # "contiguous": one (slots, max_len) KV ring per layer — HBM is sized
     # by the worst case.  "paged": a refcounted block pool + per-row block
     # tables (serve/kvcache.BlockPool); capacity tracks LIVE tokens,
     # prompts sharing a prefix alias physical blocks, and `batch` becomes a
     # scheduling cap instead of a memory cap.  The contiguous layout is the
     # paged engine's bitwise differential oracle.
-    kv_layout: str = "contiguous"
+    layout: str = "contiguous"
     # paged: tokens per physical KV block
     block_size: int = 16
     # paged: pool size per layer, INCLUDING the sink block.  None sizes the
@@ -231,22 +334,74 @@ class ServeConfig:
     # oracle to the same value makes the two layouts' online-softmax
     # reductions identical, hence bitwise-comparable.
     decode_block: int | None = None
-    # bound the waiting queue: a submit that would exceed it is REJECTED
-    # immediately (load shedding) instead of growing the queue without
-    # bound.  None = unbounded.
-    max_waiting: int | None = None
-    # watchdog: consecutive steps with zero active slots and zero admission
-    # progress (while requests wait) before the head of the queue is shed
-    # REJECTED — the engine degrades loudly instead of livelocking on a
-    # pool that will never free (external pressure, accounting bugs).
-    stall_patience: int = 64
-    # crash consistency (serve/recovery.py): a directory here arms the
-    # RecoveryManager — a crc32'd write-ahead journal of submits/cancels/
-    # pops/token deltas (fsync'd once per step) plus a crash-atomic
-    # snapshot of the full serving state every `snapshot_every` steps,
-    # staged synchronously and published tmp-dir+rename on a background
-    # thread.  restore_engine() rebuilds a crashed engine with survivor
-    # outputs bitwise identical to the never-crashed run.
+
+    def __post_init__(self):
+        if self.layout not in ("contiguous", "paged"):
+            raise ValueError(
+                f"kv_layout must be 'contiguous' or 'paged': {self.layout!r}"
+            )
+        if self.decode_block is not None and self.decode_block < 1:
+            raise ValueError(f"decode_block must be >= 1: {self.decode_block}")
+        if self.layout == "paged":
+            if self.block_size < 1:
+                raise ValueError(f"block_size must be >= 1: {self.block_size}")
+            if self.num_blocks is not None and self.num_blocks < 2:
+                raise ValueError(
+                    f"num_blocks counts the sink block too, so a usable pool "
+                    f"needs num_blocks >= 2: got {self.num_blocks} (or pass "
+                    f"None to size the pool to the contiguous footprint)"
+                )
+            if (
+                self.decode_block is not None
+                and self.decode_block != self.block_size
+            ):
+                raise ValueError(
+                    f"the paged layout always splits decode attention at "
+                    f"block_size={self.block_size}; decode_block="
+                    f"{self.decode_block} contradicts it — drop decode_block "
+                    f"(it is only for pinning a CONTIGUOUS oracle) or set "
+                    f"them equal"
+                )
+        elif self.num_blocks is not None:
+            raise ValueError(
+                f"num_blocks={self.num_blocks} only applies to "
+                f"kv_layout='paged'; the contiguous layout is sized by "
+                f"batch * max_len"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Compute-substrate routing."""
+
+    # "xla" | "pallas": route projection GEMMs through the Pallas kernel
+    # with mapper-chosen tiles (core.mapper.choose_matmul_tiles)
+    matmul: str = "xla"
+    # "flash" | "xla": decode-attention substrate.  "flash" (default) is
+    # the ragged flash-decoding path (per-slot live lengths, KV reads
+    # scale with live length); "xla" is the masked dense/blockwise oracle.
+    attention: str = "flash"
+
+    def __post_init__(self):
+        if self.matmul not in ("xla", "pallas"):
+            raise ValueError(f"matmul must be 'xla' or 'pallas': {self.matmul!r}")
+        if self.attention not in ("flash", "xla"):
+            raise ValueError(
+                f"attention must be 'flash' or 'xla': {self.attention!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilityConfig:
+    """Crash-consistency + corruption-defense knobs (serve/recovery.py)."""
+
+    # a directory here arms the RecoveryManager — a crc32'd write-ahead
+    # journal of submits/cancels/pops/token deltas (fsync'd once per step)
+    # plus a crash-atomic snapshot of the full serving state every
+    # `snapshot_every` steps, staged synchronously and published
+    # tmp-dir+rename on a background thread.  restore_engine() rebuilds a
+    # crashed engine with survivor outputs bitwise identical to the
+    # never-crashed run.
     snapshot_dir: str | None = None
     snapshot_every: int = 32
     snapshot_keep: int = 3           # published snapshots retained by GC
@@ -272,40 +427,6 @@ class ServeConfig:
     substrate_fallback: bool = True
 
     def __post_init__(self):
-        # every mis-setting here used to surface as a downstream shape
-        # error or a silently-wrong A/B — validate eagerly with messages
-        # that say what to change
-        if self.matmul not in ("xla", "pallas"):
-            raise ValueError(f"matmul must be 'xla' or 'pallas': {self.matmul!r}")
-        if self.attention not in ("flash", "xla"):
-            raise ValueError(
-                f"attention must be 'flash' or 'xla': {self.attention!r}"
-            )
-        if self.kv_layout not in ("contiguous", "paged"):
-            raise ValueError(
-                f"kv_layout must be 'contiguous' or 'paged': {self.kv_layout!r}"
-            )
-        if self.batch < 1:
-            raise ValueError(f"batch (KV slot count) must be >= 1: {self.batch}")
-        if self.max_len < 2:
-            raise ValueError(
-                f"max_len must be >= 2 (one prompt token + one generated): "
-                f"{self.max_len}"
-            )
-        if self.prefill_bucket < 0:
-            raise ValueError(
-                f"prefill_bucket must be >= 0 (0 disables bucketing): "
-                f"{self.prefill_bucket}"
-            )
-        if self.max_waiting is not None and self.max_waiting < 1:
-            raise ValueError(
-                f"max_waiting must be >= 1 (or None for unbounded): "
-                f"{self.max_waiting}"
-            )
-        if self.stall_patience < 1:
-            raise ValueError(
-                f"stall_patience must be >= 1 step: {self.stall_patience}"
-            )
         if self.snapshot_every < 1:
             raise ValueError(
                 f"snapshot_every must be >= 1 step: {self.snapshot_every}"
@@ -319,44 +440,214 @@ class ServeConfig:
                 f"journal_fsync_every must be >= 1 commit: "
                 f"{self.journal_fsync_every}"
             )
+
+
+# legacy flat ServeConfig kwarg -> (sub-config attribute, field name).
+# ServeConfig.__init__ routes these through dataclasses.replace on the
+# matching sub-config (re-running its validation) with one
+# DeprecationWarning per construction naming every flat kwarg used.
+_LEGACY_FLAT = {
+    "batch": ("scheduler", "batch"),
+    "prefill_bucket": ("scheduler", "prefill_bucket"),
+    "prefill_chunk": ("scheduler", "prefill_chunk"),
+    "token_budget": ("scheduler", "token_budget"),
+    "max_waiting": ("scheduler", "max_waiting"),
+    "stall_patience": ("scheduler", "stall_patience"),
+    "priorities": ("scheduler", "priorities"),
+    "kv_layout": ("kv", "layout"),
+    "block_size": ("kv", "block_size"),
+    "num_blocks": ("kv", "num_blocks"),
+    "prefix_sharing": ("kv", "prefix_sharing"),
+    "decode_block": ("kv", "decode_block"),
+    "matmul": ("kernel", "matmul"),
+    "attention": ("kernel", "attention"),
+    "snapshot_dir": ("durability", "snapshot_dir"),
+    "snapshot_every": ("durability", "snapshot_every"),
+    "snapshot_keep": ("durability", "snapshot_keep"),
+    "journal_fsync_every": ("durability", "journal_fsync_every"),
+    "guard_nan": ("durability", "guard_nan"),
+    "kv_checksum": ("durability", "kv_checksum"),
+    "substrate_fallback": ("durability", "substrate_fallback"),
+}
+
+
+@dataclasses.dataclass(init=False)
+class ServeConfig:
+    """Engine configuration: shape/sampling fields at the top level plus
+    four nested sub-configs (scheduler / kv / kernel / durability).
+
+    Backward compatibility is two-sided: every pre-redesign flat kwarg
+    still constructs (``ServeConfig(block_size=32)`` routes into
+    ``kv.block_size`` with a DeprecationWarning), and every flat name
+    still READS (``scfg.block_size`` is a property over ``kv.block_size``)
+    so fingerprints, engine internals, and user code survive unchanged.
+    ``dataclasses.replace`` works with both spellings."""
+
+    max_len: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+    scheduler: SchedulerConfig = dataclasses.field(
+        default_factory=SchedulerConfig
+    )
+    kv: KVConfig = dataclasses.field(default_factory=KVConfig)
+    kernel: KernelConfig = dataclasses.field(default_factory=KernelConfig)
+    durability: DurabilityConfig = dataclasses.field(
+        default_factory=DurabilityConfig
+    )
+
+    def __init__(
+        self,
+        max_len: int = 256,
+        temperature: float = 0.0,
+        seed: int = 0,
+        scheduler: SchedulerConfig | None = None,
+        kv: KVConfig | None = None,
+        kernel: KernelConfig | None = None,
+        durability: DurabilityConfig | None = None,
+        **flat,
+    ):
+        self.max_len = max_len
+        self.temperature = temperature
+        self.seed = seed
+        self.scheduler = scheduler if scheduler is not None else SchedulerConfig()
+        self.kv = kv if kv is not None else KVConfig()
+        self.kernel = kernel if kernel is not None else KernelConfig()
+        self.durability = (
+            durability if durability is not None else DurabilityConfig()
+        )
+        if flat:
+            unknown = sorted(set(flat) - set(_LEGACY_FLAT))
+            if unknown:
+                raise TypeError(
+                    f"ServeConfig got unexpected kwargs: {', '.join(unknown)}"
+                )
+            warnings.warn(
+                f"flat ServeConfig kwarg(s) {sorted(flat)} are deprecated; "
+                f"use the nested sub-configs "
+                f"(scheduler=SchedulerConfig(...), kv=KVConfig(...), "
+                f"kernel=KernelConfig(...), durability=DurabilityConfig(...))",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            grouped: dict[str, dict] = {}
+            for name, val in flat.items():
+                sub, field = _LEGACY_FLAT[name]
+                grouped.setdefault(sub, {})[field] = val
+            for sub, kwargs in grouped.items():
+                # replace() re-runs the sub-config's __post_init__, so flat
+                # construction validates exactly like nested construction
+                setattr(self, sub, dataclasses.replace(getattr(self, sub), **kwargs))
+        self.__post_init__()
+
+    def __post_init__(self):
+        # cross-sub-config checks live here, next to the fields they span;
+        # everything field-local validates inside its own sub-config
+        if self.max_len < 2:
+            raise ValueError(
+                f"max_len must be >= 2 (one prompt token + one generated): "
+                f"{self.max_len}"
+            )
         if self.kv_checksum and self.kv_layout != "paged":
             raise ValueError(
                 "kv_checksum tracks per-physical-block sums, which only "
                 "exist under kv_layout='paged'"
             )
-        if self.decode_block is not None and self.decode_block < 1:
-            raise ValueError(f"decode_block must be >= 1: {self.decode_block}")
-        if self.kv_layout == "paged":
-            if self.block_size < 1:
-                raise ValueError(f"block_size must be >= 1: {self.block_size}")
-            if self.max_len % self.block_size:
-                raise ValueError(
-                    f"max_len {self.max_len} must be a multiple of "
-                    f"block_size {self.block_size}"
-                )
-            if self.num_blocks is not None and self.num_blocks < 2:
-                raise ValueError(
-                    f"num_blocks counts the sink block too, so a usable pool "
-                    f"needs num_blocks >= 2: got {self.num_blocks} (or pass "
-                    f"None to size the pool to the contiguous footprint)"
-                )
-            if (
-                self.decode_block is not None
-                and self.decode_block != self.block_size
-            ):
-                raise ValueError(
-                    f"the paged layout always splits decode attention at "
-                    f"block_size={self.block_size}; decode_block="
-                    f"{self.decode_block} contradicts it — drop decode_block "
-                    f"(it is only for pinning a CONTIGUOUS oracle) or set "
-                    f"them equal"
-                )
-        elif self.num_blocks is not None:
+        if self.kv_layout == "paged" and self.max_len % self.block_size:
             raise ValueError(
-                f"num_blocks={self.num_blocks} only applies to "
-                f"kv_layout='paged'; the contiguous layout is sized by "
-                f"batch * max_len"
+                f"max_len {self.max_len} must be a multiple of "
+                f"block_size {self.block_size}"
             )
+        if self.prefill_chunk > 0 and self.max_len % self.prefill_chunk:
+            raise ValueError(
+                f"max_len {self.max_len} must be a multiple of "
+                f"prefill_chunk {self.prefill_chunk} so the final chunk's "
+                f"right-padding never overflows the scratch lane"
+            )
+
+    # ----- flat read-through aliases (pre-redesign field names) -----
+    @property
+    def batch(self) -> int:
+        return self.scheduler.batch
+
+    @property
+    def prefill_bucket(self) -> int:
+        return self.scheduler.prefill_bucket
+
+    @property
+    def prefill_chunk(self) -> int:
+        return self.scheduler.prefill_chunk
+
+    @property
+    def token_budget(self) -> int | None:
+        return self.scheduler.token_budget
+
+    @property
+    def max_waiting(self) -> int | None:
+        return self.scheduler.max_waiting
+
+    @property
+    def stall_patience(self) -> int:
+        return self.scheduler.stall_patience
+
+    @property
+    def priorities(self) -> bool:
+        return self.scheduler.priorities
+
+    @property
+    def kv_layout(self) -> str:
+        return self.kv.layout
+
+    @property
+    def block_size(self) -> int:
+        return self.kv.block_size
+
+    @property
+    def num_blocks(self) -> int | None:
+        return self.kv.num_blocks
+
+    @property
+    def prefix_sharing(self) -> bool:
+        return self.kv.prefix_sharing
+
+    @property
+    def decode_block(self) -> int | None:
+        return self.kv.decode_block
+
+    @property
+    def matmul(self) -> str:
+        return self.kernel.matmul
+
+    @property
+    def attention(self) -> str:
+        return self.kernel.attention
+
+    @property
+    def snapshot_dir(self) -> str | None:
+        return self.durability.snapshot_dir
+
+    @property
+    def snapshot_every(self) -> int:
+        return self.durability.snapshot_every
+
+    @property
+    def snapshot_keep(self) -> int:
+        return self.durability.snapshot_keep
+
+    @property
+    def journal_fsync_every(self) -> int:
+        return self.durability.journal_fsync_every
+
+    @property
+    def guard_nan(self) -> bool:
+        return self.durability.guard_nan
+
+    @property
+    def kv_checksum(self) -> bool:
+        return self.durability.kv_checksum
+
+    @property
+    def substrate_fallback(self) -> bool:
+        return self.durability.substrate_fallback
 
     def resolved_num_blocks(self) -> int:
         if self.num_blocks is not None:
@@ -377,6 +668,15 @@ class _ReqInfo:
     status: RequestStatus = RequestStatus.WAITING
     reason: str = ""
     preemptions: int = 0
+    # resolved sampling seed (Request.seed or ServeConfig.seed) and its
+    # precomputed per-request PRNG base fold_in(PRNGKey(seed), rid); the
+    # jitted programs fold the step index in on device, completing the
+    # legacy fold_in(fold_in(PRNGKey(seed), rid), t) chain bit-for-bit
+    seed: int = 0
+    key: np.ndarray | None = None
+    submitted: int = 0           # engine step count at submit
+    ttft: int | None = None      # steps from submit to first emitted token
+    on_token: TokenCallback | None = None  # per-request stream (not journaled)
 
 
 @dataclasses.dataclass
@@ -399,6 +699,19 @@ class _PagedRow:
     n_shared_full: int           # leading full blocks aliased via the index
     tail_shared: bool            # partial prompt tail aliased (CoW pending)
     cow_dst: int | None          # pre-allocated CoW target for the tail
+
+
+@dataclasses.dataclass
+class _PrefillLane:
+    """One mid-flight chunked prefill: the PREFILLING request holds a slot
+    (and, paged, its blocks) while its prompt streams through the batch-1
+    scratch cache chunk by chunk.  Nothing is published to the shared KV
+    until install time, so dropping a lane needs no device writes."""
+
+    rid: int
+    slot: int
+    filled: int = 0              # prompt tokens already through the scratch
+    row: _PagedRow | None = None  # paged ownership (radix-registered at install)
 
 
 def _pallas_mm(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -456,6 +769,7 @@ class Engine:
         self._step_no = 0
         self._stalled = 0            # consecutive idle no-progress steps
         self._cur_tok = np.zeros((scfg.batch,), np.int32)
+        self._seed_roots: dict[int, jax.Array] = {}  # seed -> PRNGKey(seed)
         # scheduling evidence for the iso-memory benches plus the lifecycle
         # counters the chaos harness and fault-storm bench report
         self.stats = {
@@ -474,9 +788,16 @@ class Engine:
 
         model, impl, axes = self.model, self._impl, self._axes
         max_len = scfg.max_len
-        sample_one, req_key = self._sampler()
+        sample_one = self._sampler()
 
-        def admit_fn(params, toks, big, slots_, rids, true_lens):
+        def first_tok(logits, keys):
+            # per-row base keys come in precomputed (fold_in(PRNGKey(seed),
+            # rid)); folding t=0 here completes the legacy key chain bitwise
+            return jax.vmap(
+                lambda lg, k: sample_one(lg, jax.random.fold_in(k, jnp.int32(0)))
+            )(logits, keys)
+
+        def admit_fn(params, toks, big, slots_, keys, true_lens):
             """Fused admission: prefill `n` prompts (right-padded rows mask
             their tail; exact rows mask nothing), scatter each into its
             slot, and sample each request's first token — one dispatch."""
@@ -491,12 +812,9 @@ class Engine:
                 big = kvcache.slot_store(
                     big, kvcache.take_slot(small, i, axes), slots_[i], axes
                 )
-            toks0 = jax.vmap(
-                lambda lg, r: sample_one(lg, req_key(r, jnp.int32(0)))
-            )(logits, rids)
-            return toks0, big
+            return first_tok(logits, keys), big
 
-        def paged_prefill_fn(params, toks, rids, true_lens):
+        def paged_prefill_fn(params, toks, keys, true_lens):
             """Paged admission, phase 1: prefill into a contiguous scratch
             (the SAME program shape the contiguous oracle admits through,
             so first tokens and packed K/V stay bitwise comparable) and
@@ -509,10 +827,7 @@ class Engine:
                 logits, small = model.prefill(
                     params, toks, small, last_index=true_lens - 1
                 )
-            toks0 = jax.vmap(
-                lambda lg, r: sample_one(lg, req_key(r, jnp.int32(0)))
-            )(logits, rids)
-            return toks0, {"k": small["k"], "v": small["v"]}
+            return first_tok(logits, keys), {"k": small["k"], "v": small["v"]}
 
         # the KV cache pytree is DONATED: the ring scatter and admission
         # slot_store update the buffers in place instead of copying every
@@ -531,6 +846,58 @@ class Engine:
             self._sink_row = np.zeros((scfg.max_len // scfg.block_size,), np.int32)
         else:
             self._sink_row = None
+
+        # ---- token-level unified scheduler (prefill_chunk > 0) ----
+        # Prompts stream through a persistent batch-1 contiguous scratch
+        # cache in fixed (1, prefill_chunk) chunks: positions derive from
+        # the scratch's length cursor (`positions=None` in logits_fn), so
+        # chunk N continues exactly where chunk N-1 stopped and the K/V/
+        # logits bits match a monolithic prefill of the whole prompt.
+        # Install reuses the monolithic publication paths verbatim
+        # (mask_prompt_tail + slot_store, or paged set-row + pack), which
+        # is what makes the prefill_chunk=0 engine a bitwise oracle.
+        self._chunk = scfg.prefill_chunk
+        self._lane: _PrefillLane | None = None
+        self._scratch = None
+        if self._chunk:
+            if not kvcache.supports_padded_prefill(cfg):
+                raise ValueError(
+                    f"prefill_chunk needs all-global attention (positions "
+                    f"derive from the cache cursor and the final chunk is "
+                    f"right-padded); {cfg.name} has ring/recurrent/hybrid "
+                    f"caches — use monolithic admission (prefill_chunk=0)"
+                )
+
+            def chunk_fn(params, toks, scratch, last_index, key):
+                """One fixed-shape prefill chunk through the scratch lane.
+                A candidate first token is sampled every chunk at
+                `last_index` (vmapped over the 1-row batch, mirroring the
+                admission programs bit-for-bit); only the final chunk's
+                survives on the host."""
+                with L.matmul_override(impl):
+                    x = L.embed(params["embed"], toks)
+                    logits, scratch, _ = model.logits_fn(
+                        params, x, positions=None, caches=scratch
+                    )
+                sel = jnp.take_along_axis(
+                    logits, last_index[:, None, None], axis=1
+                )[:, 0]
+                return first_tok(sel, key[None]), scratch
+
+            def install_fn(big, scratch, slot, true_lens):
+                """Publish a completed lane into the contiguous ring — the
+                exact monolithic admission path (tail mask + slot scatter),
+                so the installed slot is bitwise the monolithic one."""
+                small = kvcache.mask_prompt_tail(scratch, true_lens)
+                return kvcache.slot_store(
+                    big, kvcache.take_slot(small, 0, axes), slot, axes
+                )
+
+            self._chunk_step = jax.jit(chunk_fn, donate_argnums=(2,))
+            self._install_slot = jax.jit(install_fn, donate_argnums=(0,))
+            self._fresh_scratch = jax.jit(
+                lambda: kvcache.build_caches(cfg, 1, max_len)
+            )
 
         # optional per-physical-block checksum audit (paged only): host
         # mirror of |kpool|+|vpool| sums per block, verified after every
@@ -568,7 +935,6 @@ class Engine:
             )
 
     def _sampler(self):
-        key0 = jax.random.PRNGKey(self.scfg.seed)
         temp = self.scfg.temperature
 
         def sample_one(logits: jax.Array, key: jax.Array) -> jax.Array:
@@ -576,10 +942,17 @@ class Engine:
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return jax.random.categorical(key, logits / temp).astype(jnp.int32)
 
-        def req_key(rid: jax.Array, t: jax.Array) -> jax.Array:
-            return jax.random.fold_in(jax.random.fold_in(key0, rid), t)
+        return sample_one
 
-        return sample_one, req_key
+    def _req_base_key(self, rid: int, seed: int) -> np.ndarray:
+        """Per-request PRNG base ``fold_in(PRNGKey(seed), rid)``, computed
+        once at submit.  The jitted programs fold the step index in on
+        device, so with the default seed the full chain is bit-identical
+        to the legacy ``fold_in(fold_in(PRNGKey(scfg.seed), rid), t)``."""
+        root = self._seed_roots.get(seed)
+        if root is None:
+            root = self._seed_roots[seed] = jax.random.PRNGKey(seed)
+        return np.asarray(jax.random.fold_in(root, rid), np.uint32)
 
     def _make_decode(self, attn):
         """Build the jitted decode program on substrate ``attn`` (rebuilt
@@ -588,18 +961,18 @@ class Engine:
         corruption guard rides the token sync, costing no extra transfer.
         """
         model, impl, dblk = self.model, self._impl, self.scfg.decode_block
-        sample_one, req_key = self._sampler()
+        sample_one = self._sampler()
 
-        def decode_fn(params, toks, caches, rids, ts):
+        def decode_fn(params, toks, caches, keys, ts):
             with (
                 L.matmul_override(impl),
                 L.attention_override(attn),
                 L.decode_block_override(dblk),
             ):
                 logits, caches = model.decode_step(params, toks, caches)
-            nxt = jax.vmap(lambda lg, r, t: sample_one(lg, req_key(r, t)))(
-                logits, rids, ts
-            )
+            nxt = jax.vmap(
+                lambda lg, k, t: sample_one(lg, jax.random.fold_in(k, t))
+            )(logits, keys, ts)
             bad = ~jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
             return (nxt, bad), caches
 
@@ -679,6 +1052,7 @@ class Engine:
             if req.deadline_steps is not None
             else None
         )
+        seed = self.scfg.seed if req.seed is None else int(req.seed)
         info = _ReqInfo(
             rid=rid,
             prompt=prompt,
@@ -686,6 +1060,10 @@ class Engine:
             priority=int(req.priority),
             deadline=deadline,
             seq=self._next_seq,
+            seed=seed,
+            key=self._req_base_key(rid, seed),
+            submitted=self._step_no,
+            on_token=req.on_token,
         )
         self._next_seq += 1
         self._reqs[rid] = info
@@ -748,6 +1126,8 @@ class Engine:
             self.stats["recovered"] += 1
         else:
             out.append(tok)
+            if info.ttft is None:
+                info.ttft = self._step_no - info.submitted
         self._cur_tok[slot] = tok
         info.status = RequestStatus.ACTIVE
         # the slot is registered BEFORE the callback runs so a callback
@@ -757,8 +1137,8 @@ class Engine:
             rid=info.rid, emitted=1, budget=info.budget, replay=replay
         )
         done = info.budget == 1
-        if not replay and on_token is not None:
-            on_token(info.rid, tok, 0, done)
+        if not replay:
+            self._emit_cbs(info, tok, 0, done, on_token)
         if info.status != RequestStatus.ACTIVE:
             return False  # callback ended it; slot already released
         if done:
@@ -768,17 +1148,29 @@ class Engine:
         return True
 
     @staticmethod
+    def _emit_cbs(
+        info: _ReqInfo, tok: int, idx: int, done: bool, on_token
+    ) -> None:
+        """Deliver one emitted token to the per-request callback (if any)
+        then the step-level one; either may cancel/preempt mid-delivery —
+        callers re-check status afterwards exactly as before."""
+        if info.on_token is not None:
+            info.on_token(info.rid, tok, idx, done)
+        if on_token is not None:
+            on_token(info.rid, tok, idx, done)
+
+    @staticmethod
     def _prompt_batch(lpad: int, infos: list[_ReqInfo]) -> tuple:
         """Right-pad one admission group's prompts into a (n, lpad) token
-        batch plus per-row request ids / true lengths."""
+        batch plus per-row PRNG base keys / true lengths."""
         n = len(infos)
         toks = np.zeros((n, lpad), np.int32)
-        rids = np.empty((n,), np.int32)
+        keys = np.empty((n, 2), np.uint32)
         tlens = np.empty((n,), np.int32)
         for j, info in enumerate(infos):
             toks[j, : len(info.prompt)] = info.prompt
-            rids[j], tlens[j] = info.rid, len(info.prompt)
-        return toks, rids, tlens
+            keys[j], tlens[j] = info.key, len(info.prompt)
+        return toks, keys, tlens
 
     def _admit_waiting(self, on_token: TokenCallback | None) -> bool:
         """Backfill every free slot from the queue.  Admissions sharing a
@@ -797,14 +1189,14 @@ class Engine:
             groups.setdefault(lpad, []).append((info, slot))
 
         for lpad, items in groups.items():
-            toks, rids, tlens = self._prompt_batch(lpad, [it[0] for it in items])
+            toks, keys, tlens = self._prompt_batch(lpad, [it[0] for it in items])
             slots_ = np.asarray([it[1] for it in items], np.int32)
             toks0, self.caches = self._admit_group(
                 self.params,
                 jnp.asarray(toks),
                 self.caches,
                 jnp.asarray(slots_),
-                jnp.asarray(rids),
+                jnp.asarray(keys),
                 jnp.asarray(tlens),
             )
             toks0 = np.asarray(toks0)
@@ -828,66 +1220,29 @@ class Engine:
         groups: dict[int, list[tuple[_ReqInfo, int, _PagedRow]]] = {}
         while self._free and self._waiting:
             info = self._reqs[self._waiting[0]]
-            prompt, budget = info.prompt, info.budget
-            plen = len(prompt)
-            total = -(-(plen + budget) // bs)
-            shared_full: list[int] = []
-            shared_tail = None
-            if scfg.prefix_sharing:
-                shared_full, shared_tail = self.pool.match_prefix(prompt.tolist())
-            n_shared = len(shared_full) + (1 if shared_tail is not None else 0)
-            cow_needed = shared_tail is not None and budget > 1
-            need = total - n_shared + (1 if cow_needed else 0)
-            if need > self.pool.free_blocks:
+            row = self._commit_row(info)
+            if row is None:
                 break  # head-of-line waits for completions to free blocks
             self._waiting.pop(0)
             slot = self._free.popleft()
-            for b in shared_full:
-                self.pool.retain(b)
-            if shared_tail is not None:
-                self.pool.retain(shared_tail)
-            blocks = list(shared_full)
-            if shared_tail is not None:
-                blocks.append(shared_tail)
-            while len(blocks) < total:
-                blocks.append(self.pool.alloc())
-            # the CoW target is reserved NOW so the first divergent write
-            # can never be starved by admissions racing it to the free list
-            cow_dst = self.pool.alloc() if cow_needed else None
-            if scfg.prefix_sharing:
-                toks = prompt.tolist()
-                n_full = plen // bs
-                prev = -1
-                for i in range(n_full):
-                    self.pool.register(
-                        prev, tuple(toks[i * bs : (i + 1) * bs]), blocks[i]
-                    )
-                    prev = blocks[i]
-                tail = tuple(toks[n_full * bs :])
-                if tail and n_full < total:
-                    self.pool.register(prev, tail, blocks[n_full])
-            row = _PagedRow(
-                blocks=blocks,
-                plen=plen,
-                n_shared_full=len(shared_full),
-                tail_shared=shared_tail is not None,
-                cow_dst=cow_dst,
-            )
+            # monolithic admission packs in this same step, so the chain
+            # can be published to the prefix index immediately
+            self._register_chain(info, row)
             self._rows[slot] = row
             if self._kv_sums is not None:
                 # checksum mode: admission packs (or aliases) these blocks
                 # this step; aliased prefix blocks are untouched on device
                 # but marking them is a harmless over-approximation
                 self._touched.update(row.blocks)
-            lpad = self._bucket_len(plen)
+            lpad = self._bucket_len(row.plen)
             groups.setdefault(lpad, []).append((info, slot, row))
 
         for lpad, items in groups.items():
-            toks, rids, tlens = self._prompt_batch(lpad, [it[0] for it in items])
+            toks, keys, tlens = self._prompt_batch(lpad, [it[0] for it in items])
             toks0, scratch = self._paged_prefill(
                 self.params,
                 jnp.asarray(toks),
-                jnp.asarray(rids),
+                jnp.asarray(keys),
                 jnp.asarray(tlens),
             )
             toks0 = np.asarray(toks0)
@@ -915,6 +1270,214 @@ class Engine:
                 self._activate(info, slot, int(toks0[j]), on_token)
         self.stats["peak_active"] = max(self.stats["peak_active"], len(self._slots))
         return bool(groups)
+
+    def _commit_row(self, info: _ReqInfo) -> _PagedRow | None:
+        """Host-side block ownership for one paged admission: retain prefix
+        aliases, allocate the rest, reserve the CoW target (so the first
+        divergent write can never be starved by admissions racing it to
+        the free list).  Returns None when the pool cannot satisfy the
+        request right now — nothing is committed in that case."""
+        scfg = self.scfg
+        bs = scfg.block_size
+        prompt, budget = info.prompt, info.budget
+        plen = len(prompt)
+        total = -(-(plen + budget) // bs)
+        shared_full: list[int] = []
+        shared_tail = None
+        if scfg.prefix_sharing:
+            shared_full, shared_tail = self.pool.match_prefix(prompt.tolist())
+        n_shared = len(shared_full) + (1 if shared_tail is not None else 0)
+        cow_needed = shared_tail is not None and budget > 1
+        need = total - n_shared + (1 if cow_needed else 0)
+        if need > self.pool.free_blocks:
+            return None
+        for b in shared_full:
+            self.pool.retain(b)
+        if shared_tail is not None:
+            self.pool.retain(shared_tail)
+        blocks = list(shared_full)
+        if shared_tail is not None:
+            blocks.append(shared_tail)
+        while len(blocks) < total:
+            blocks.append(self.pool.alloc())
+        cow_dst = self.pool.alloc() if cow_needed else None
+        return _PagedRow(
+            blocks=blocks,
+            plen=plen,
+            n_shared_full=len(shared_full),
+            tail_shared=shared_tail is not None,
+            cow_dst=cow_dst,
+        )
+
+    def _register_chain(self, info: _ReqInfo, row: _PagedRow) -> None:
+        """Publish this row's prompt blocks in the radix prefix index.
+        Monolithic admission does this at commit time (it packs within the
+        same step); chunked admission defers it to install time — a block
+        whose K/V has not been packed yet must never be aliased by a
+        concurrent admission."""
+        if not self.scfg.prefix_sharing:
+            return
+        bs = self.scfg.block_size
+        toks = info.prompt.tolist()
+        n_full = row.plen // bs
+        prev = -1
+        for i in range(n_full):
+            self.pool.register(prev, tuple(toks[i * bs : (i + 1) * bs]), row.blocks[i])
+            prev = row.blocks[i]
+        tail = tuple(toks[n_full * bs :])
+        if tail and n_full < len(row.blocks):
+            self.pool.register(prev, tail, row.blocks[n_full])
+
+    # ----------------------------------------------- chunked prefill lane --
+    def _start_lane(self) -> bool:
+        """Claim the queue head for the scratch lane: reserve a slot (and,
+        paged, commit block ownership) and mark it PREFILLING.  Returns
+        False when no request can start (empty queue, no free slot, or a
+        block-starved pool)."""
+        if self._lane is not None or not self._waiting or not self._free:
+            return False
+        info = self._reqs[self._waiting[0]]
+        row = None
+        if self._paged:
+            row = self._commit_row(info)
+            if row is None:
+                return False
+        self._waiting.pop(0)
+        slot = self._free.popleft()
+        info.status = RequestStatus.PREFILLING
+        self._scratch = self._fresh_scratch()
+        self._lane = _PrefillLane(rid=info.rid, slot=slot, row=row)
+        return True
+
+    def _advance_lane(self):
+        """Run ONE fixed-shape chunk of the lane's prompt through the
+        scratch.  Only the final chunk is right-padded (intermediate
+        chunks are always full, so the scratch length cursor that derives
+        positions never overshoots mid-prompt).  Returns (done, candidate
+        first token)."""
+        lane = self._lane
+        info = self._reqs[lane.rid]
+        C = self._chunk
+        plen = len(info.prompt)
+        end = min(plen, lane.filled + C)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, : end - lane.filled] = info.prompt[lane.filled : end]
+        li = np.asarray([min(C - 1, max(0, plen - 1 - lane.filled))], np.int32)
+        tok0, self._scratch = self._chunk_step(
+            self.params,
+            jnp.asarray(toks),
+            self._scratch,
+            jnp.asarray(li),
+            jnp.asarray(info.key),
+        )
+        lane.filled = end
+        return end >= plen, tok0
+
+    def _install_lane(self, tok0, on_token: TokenCallback | None) -> None:
+        """Publish a completed lane: install the scratch K/V through the
+        EXACT monolithic publication path (contiguous tail-mask + slot
+        scatter, or paged set-row + block pack), register the paged chain
+        in the prefix index, and activate the request with its sampled
+        first token — from here on it is indistinguishable from a
+        monolithically admitted request."""
+        lane = self._lane
+        self._lane = None
+        info = self._reqs[lane.rid]
+        plen = len(info.prompt)
+        slot = lane.slot
+        if self._paged:
+            row = lane.row
+            bs = self.scfg.block_size
+            n_blk = self.scfg.max_len // bs
+            table_row = np.full((n_blk,), kvcache.SINK_BLOCK, np.int32)
+            table_row[: len(row.blocks)] = row.blocks
+            self.caches = self._set_row(
+                self.caches,
+                jnp.int32(slot),
+                jnp.asarray(table_row),
+                jnp.int32(plen),
+            )
+            n_prompt = -(-plen // bs)
+            start = row.n_shared_full
+            n_pack = n_prompt - start - (1 if row.tail_shared else 0)
+            if n_pack > 0:
+                self.caches = self._pack_row(
+                    self.caches,
+                    {"k": self._scratch["k"], "v": self._scratch["v"]},
+                    jnp.int32(0),
+                    jnp.int32(start),
+                    jnp.asarray(row.blocks[start : start + n_pack], jnp.int32),
+                )
+            self._register_chain(info, row)
+            self._rows[slot] = row
+            if self._kv_sums is not None:
+                self._touched.update(row.blocks)
+        else:
+            self.caches = self._install_slot(
+                self.caches,
+                self._scratch,
+                jnp.int32(slot),
+                jnp.asarray([plen], jnp.int32),
+            )
+        self.stats["admitted"] += 1
+        self._activate(info, slot, int(np.asarray(tok0)[0]), on_token)
+        self.stats["peak_active"] = max(self.stats["peak_active"], len(self._slots))
+
+    def _drop_lane(self) -> None:
+        """Release a mid-flight lane's resources.  No device writes are
+        needed: install is the only publisher, so the device block table
+        and slot caches were never touched — the slot and any committed
+        blocks simply return to their free pools."""
+        lane = self._lane
+        self._lane = None
+        if lane.row is not None:
+            for b in lane.row.blocks:
+                self.pool.release(b)
+            if lane.row.cow_dst is not None:
+                self.pool.release(lane.row.cow_dst)
+        self._free.append(lane.slot)
+
+    def _preempt_lane(self) -> None:
+        """Chunk-granular preemption: a higher-priority arrival takes the
+        lane between chunks.  The victim requeues PREEMPTED at its
+        original arrival position; it has emitted zero tokens, so recovery
+        is a plain re-prefill (through the prefix index when paged) —
+        bitwise identical by determinism."""
+        info = self._reqs[self._lane.rid]
+        self._drop_lane()
+        info.status = RequestStatus.PREEMPTED
+        info.preemptions += 1
+        self.stats["preempted"] += 1
+        self._enqueue(info)
+
+    def _schedule_chunks(self, on_token: TokenCallback | None) -> bool:
+        """The unified scheduler's admission half: advance up to
+        ``token_budget // prefill_chunk`` chunks this step — starting,
+        installing, and (priority) preempting lanes at chunk granularity —
+        then fall through to the shared decode of all live slots.  Returns
+        True when any admission progress was made."""
+        progressed = False
+        budget = self.scfg.token_budget
+        chunks_left = None if budget is None else budget // self._chunk
+        while chunks_left is None or chunks_left > 0:
+            if (
+                self._lane is not None
+                and self._waiting
+                and self.scfg.priorities
+                and self._reqs[self._waiting[0]].priority
+                > self._reqs[self._lane.rid].priority
+            ):
+                self._preempt_lane()
+                progressed = True
+            if self._lane is None and not self._start_lane():
+                break
+            done, tok0 = self._advance_lane()
+            progressed = True
+            if chunks_left is not None:
+                chunks_left -= 1
+            if done:
+                self._install_lane(tok0, on_token)
+        return progressed
 
     def _resolve_cow(self) -> None:
         """Before rows write: give every slot still aliasing a shared
@@ -975,7 +1538,10 @@ class Engine:
         ground truth the pool's refcounts must mirror; used by the fuzz
         suite's invariant checks)."""
         refs: dict[int, int] = {}
-        for row in self._rows.values():
+        rows = list(self._rows.values())
+        if self._lane is not None and self._lane.row is not None:
+            rows.append(self._lane.row)  # lane ownership commits at start
+        for row in rows:
             for b in row.blocks:
                 refs[b] = refs.get(b, 0) + 1
             if row.cow_dst is not None:
@@ -1000,6 +1566,8 @@ class Engine:
             return info.status
         if info.status == RequestStatus.ACTIVE:
             self._release_slot(self._slot_of(rid))
+        elif info.status == RequestStatus.PREFILLING:
+            self._drop_lane()  # nothing published yet: just return resources
         else:  # WAITING or PREEMPTED: sitting in the queue
             self._waiting.remove(rid)
         self.stats["cancelled"] += 1
@@ -1017,7 +1585,12 @@ class Engine:
         bitwise identical to an uninterrupted run.  Returns False for
         non-active requests."""
         info = self._reqs.get(rid)
-        if info is None or info.status != RequestStatus.ACTIVE:
+        if info is None:
+            return False
+        if info.status == RequestStatus.PREFILLING:
+            self._preempt_lane()
+            return True
+        if info.status != RequestStatus.ACTIVE:
             return False
         self._release_slot(self._slot_of(rid))
         info.status = RequestStatus.PREEMPTED
@@ -1040,6 +1613,14 @@ class Engine:
             self._finish(
                 self._reqs[rid], RequestStatus.FAILED, "deadline expired in queue"
             )
+        if self._lane is not None:
+            info = self._reqs[self._lane.rid]
+            if info.deadline is not None and now > info.deadline:
+                self._drop_lane()
+                self.stats["expired"] += 1
+                self._finish(
+                    info, RequestStatus.FAILED, "deadline expired while prefilling"
+                )
         for slot in [
             s
             for s, st in sorted(self._slots.items())
@@ -1146,13 +1727,21 @@ class Engine:
         self._expire_deadlines()
         self._preempt_pass()
         admitted = False
-        while self._free and self._waiting:
-            if not self._admit_waiting(on_token):
-                break  # paged: head of queue waits for free blocks
-            admitted = True
+        if self._chunk:
+            admitted = self._schedule_chunks(on_token)
+        else:
+            while self._free and self._waiting:
+                if not self._admit_waiting(on_token):
+                    break  # paged: head of queue waits for free blocks
+                admitted = True
         if self._paged:
             self._resolve_cow()
         if not self._slots:
+            if self._lane is not None:
+                # a mid-flight prefill lane IS progress: decode has nothing
+                # to do yet, but the engine is anything but idle
+                self._stalled = 0
+                return True
             if not self._waiting:
                 self._stalled = 0
                 return False
@@ -1179,10 +1768,10 @@ class Engine:
         self._stalled = 0
 
         B = self.scfg.batch
-        rids = np.zeros((B,), np.int32)
+        keys = np.zeros((B, 2), np.uint32)
         ts = np.zeros((B,), np.int32)
         for s, st in self._slots.items():
-            rids[s], ts[s] = st.rid, st.emitted
+            keys[s], ts[s] = self._reqs[st.rid].key, st.emitted
         if self._kv_sums is not None:
             # the one block each live row legally appends to this step:
             # decode writes KV at position plen + emitted - 1 (the first
@@ -1195,7 +1784,7 @@ class Engine:
             self.params,
             jnp.asarray(self._cur_tok[:, None]),
             self.caches,
-            jnp.asarray(rids),
+            jnp.asarray(keys),
             jnp.asarray(ts),
         )
         nxt = np.asarray(nxt)
@@ -1235,8 +1824,7 @@ class Engine:
             out.append(tok)
             st.emitted += 1
             done = st.emitted >= st.budget
-            if on_token is not None:
-                on_token(st.rid, tok, st.emitted - 1, done)
+            self._emit_cbs(self._reqs[st.rid], tok, st.emitted - 1, done, on_token)
             if done:
                 finished.append((s, st.rid))
         for s, rid in finished:
@@ -1264,7 +1852,9 @@ class Engine:
                 reason="request id never submitted (or already popped)",
             )
         tokens = np.asarray(self._outputs[rid], np.int32)
-        result = RequestResult(info.status, tokens, info.reason, info.preemptions)
+        result = RequestResult(
+            info.status, tokens, info.reason, info.preemptions, info.ttft
+        )
         if info.status in TERMINAL_STATUSES:
             del self._reqs[rid]
             del self._outputs[rid]

@@ -212,6 +212,9 @@ def _submit_record(info: _ReqInfo) -> dict:
         "seq": info.seq,
         "status": info.status.value,
         "reason": info.reason,
+        "seed": info.seed,
+        "submitted": info.submitted,
+        "ttft": info.ttft,
     }
 
 
@@ -239,16 +242,47 @@ def _scfg_fingerprint(scfg: ServeConfig) -> dict:
 
 def _host_state(eng: Engine) -> dict:
     """Deep-copied, JSON-safe host bookkeeping — the background writer must
-    see a frozen image while the engine keeps stepping."""
+    see a frozen image while the engine keeps stepping.
+
+    A mid-flight chunked-prefill lane is serialized as its request
+    REQUEUED (WAITING, slot freed, committed blocks released in the
+    persisted pool image): the lane has published nothing — zero tokens,
+    no device block table or slot writes — so restore is a plain
+    re-prefill, bitwise identical by determinism."""
+    free = list(eng._free)
+    waiting = list(eng._waiting)
+    pool_state = eng.pool.to_state() if eng.pool is not None else None
+    requeued: set[int] = set()
+    lane = eng._lane
+    if lane is not None:
+        free.append(lane.slot)
+        waiting = sorted(
+            waiting + [lane.rid],
+            key=lambda r: (-eng._reqs[r].priority, eng._reqs[r].seq),
+        )
+        requeued.add(lane.rid)
+        if pool_state is not None and lane.row is not None:
+            pool = BlockPool.from_state(pool_state)
+            for b in lane.row.blocks:
+                pool.release(b)
+            if lane.row.cow_dst is not None:
+                pool.release(lane.row.cow_dst)
+            pool_state = pool.to_state()
+    reqs = []
+    for info in eng._reqs.values():
+        rec = _submit_record(info)
+        if info.rid in requeued:
+            rec["status"] = RequestStatus.WAITING.value
+        reqs.append(rec)
     return {
         "step_no": eng._step_no,
         "next_rid": eng._next_rid,
         "next_seq": eng._next_seq,
         "stalled": eng._stalled,
         "stats": dict(eng.stats),
-        "free": list(eng._free),
-        "waiting": list(eng._waiting),
-        "reqs": [_submit_record(info) for info in eng._reqs.values()],
+        "free": free,
+        "waiting": waiting,
+        "reqs": reqs,
         "outputs": {str(rid): list(out) for rid, out in eng._outputs.items()},
         "slots": {
             str(s): {
@@ -269,7 +303,7 @@ def _host_state(eng: Engine) -> dict:
             }
             for s, row in eng._rows.items()
         },
-        "pool": eng.pool.to_state() if eng.pool is not None else None,
+        "pool": pool_state,
     }
 
 
@@ -577,8 +611,11 @@ def _apply_snapshot(eng: Engine, snap: dict) -> None:
     eng._waiting = [int(r) for r in h["waiting"]]
     eng._reqs = {}
     for r in h["reqs"]:
-        eng._reqs[int(r["rid"])] = _ReqInfo(
-            rid=int(r["rid"]),
+        rid = int(r["rid"])
+        seed = int(r.get("seed", eng.scfg.seed))
+        ttft = r.get("ttft")
+        eng._reqs[rid] = _ReqInfo(
+            rid=rid,
             prompt=np.asarray(r["prompt"], np.int32),
             budget=int(r["budget"]),
             priority=int(r["priority"]),
@@ -586,6 +623,10 @@ def _apply_snapshot(eng: Engine, snap: dict) -> None:
             seq=int(r["seq"]),
             status=RequestStatus(r["status"]),
             reason=r.get("reason", ""),
+            seed=seed,
+            key=eng._req_base_key(rid, seed),
+            submitted=int(r.get("submitted", 0)),
+            ttft=None if ttft is None else int(ttft),
         )
     eng._outputs = {
         int(rid): [int(t) for t in out] for rid, out in h["outputs"].items()
@@ -630,6 +671,8 @@ def _apply_records(
         if t == "submit":
             if rid in eng._reqs:
                 continue  # defensive: already present via snapshot
+            seed = int(rec.get("seed", eng.scfg.seed))
+            ttft = rec.get("ttft")
             info = _ReqInfo(
                 rid=rid,
                 prompt=np.asarray(rec["prompt"], np.int32),
@@ -641,6 +684,10 @@ def _apply_records(
                 seq=int(rec["seq"]),
                 status=RequestStatus(rec["status"]),
                 reason=rec.get("reason", ""),
+                seed=seed,
+                key=eng._req_base_key(rid, seed),
+                submitted=int(rec.get("submitted", 0)),
+                ttft=None if ttft is None else int(ttft),
             )
             eng._reqs[rid] = info
             eng._outputs[rid] = []
@@ -684,7 +731,14 @@ def restore_engine(
     directory = directory or scfg.snapshot_dir
     if not directory:
         raise ValueError("restore_engine needs a directory or scfg.snapshot_dir")
-    eng = Engine(cfg, params, dataclasses.replace(scfg, snapshot_dir=None))
+    eng = Engine(
+        cfg,
+        params,
+        dataclasses.replace(
+            scfg,
+            durability=dataclasses.replace(scfg.durability, snapshot_dir=None),
+        ),
+    )
     report = RecoveryReport(
         source="fresh",
         snapshot_key=None,

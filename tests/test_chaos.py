@@ -36,11 +36,13 @@ def smol():
 
 
 def _setups(cfg, params):
-    """Three reused (faulted engine, oracle engine) pairs: an ample paged
+    """Four reused (faulted engine, oracle engine) pairs: an ample paged
     pool, a block-starved paged pool (admission waits and preemption must
-    free real capacity), and the contiguous engine (the lifecycle layer is
-    layout-agnostic).  Oracles pin the contiguous decode split to the
-    paged block size, the PR-5 bitwise-differential idiom."""
+    free real capacity), the contiguous engine (the lifecycle layer is
+    layout-agnostic), and the chunked unified scheduler (budget-bound
+    prefill lanes mid-flight across steps — cancels/preemptions/spikes
+    land on PREFILLING requests too).  Oracles pin the contiguous decode
+    split to the paged block size, the PR-5 bitwise-differential idiom."""
     common = dict(
         batch=3,
         max_len=MAX_LEN,
@@ -54,6 +56,20 @@ def _setups(cfg, params):
         (
             "paged-ample",
             Engine(cfg, params, ServeConfig(stall_patience=6, **paged)),
+            Engine(cfg, params, oracle_scfg),
+        ),
+        (
+            "paged-chunked",
+            Engine(
+                cfg,
+                params,
+                ServeConfig(
+                    prefill_chunk=BS,
+                    token_budget=BS,
+                    stall_patience=6,
+                    **paged,
+                ),
+            ),
             Engine(cfg, params, oracle_scfg),
         ),
         (
@@ -174,6 +190,16 @@ def test_crash_restart_episode_matrix(smol, tmp_path):
     durable = dict(snapshot_every=4, snapshot_keep=2)
     setups = [
         ("paged-ample", ServeConfig(stall_patience=6, **paged, **durable)),
+        (
+            "paged-chunked",
+            ServeConfig(
+                prefill_chunk=BS,
+                token_budget=BS,
+                stall_patience=6,
+                **paged,
+                **durable,
+            ),
+        ),
         (
             "paged-starved",
             ServeConfig(

@@ -374,3 +374,56 @@ def test_substrate_fallback_disabled_raises(smol, paged_oracle):
     with pytest.raises(RuntimeError, match="exploded"):
         while eng.step():
             pass
+
+
+# ------------------------------------------- crash mid-prefill (chunked) --
+
+
+def test_crash_mid_prefill_restores_bitwise(smol, tmp_path):
+    """A snapshot taken while a chunked-prefill lane is mid-flight
+    serializes the lane's request as requeued (zero tokens published, its
+    blocks released in the persisted pool image): restore re-prefills it
+    from scratch and the final output is bitwise identical to a
+    never-crashed run."""
+    cfg, params = smol
+    kw = dict(
+        batch=2, max_len=MAX_LEN, kv_layout="paged", block_size=BS,
+        temperature=0.8, seed=3, prefill_chunk=BS, token_budget=BS,
+    )
+    reqs = [
+        Request(p, 5, request_id=i)
+        for i, p in enumerate(
+            np.random.default_rng(7).integers(
+                0, cfg.vocab, (3, 40)
+            ).astype(np.int32)
+        )
+    ]
+    want = {
+        r.request_id: o.tolist()
+        for r, o in zip(reqs, Engine(cfg, params, ServeConfig(**kw)).run(
+            [Request(r.prompt, 5, request_id=r.request_id) for r in reqs]
+        ))
+    }
+
+    scfg = ServeConfig(snapshot_dir=str(tmp_path), snapshot_every=1, **kw)
+    eng = Engine(cfg, params, scfg)
+    for r in reqs:
+        eng.submit(r)
+    # 40-token prompts at an 8-token budget need 5 steps per lane: two
+    # steps in, a lane is guaranteed mid-flight
+    eng.step()
+    eng.step()
+    assert eng._lane is not None, "expected a mid-flight prefill lane"
+    mid_rid = eng._lane.rid
+    eng.recovery.wait()  # let the armed per-step snapshot publish
+    eng.recovery.journal._f.close()  # simulated SIGKILL
+    del eng
+
+    eng2, report = recovery.restore_engine(cfg, params, scfg)
+    chaos.audit(eng2)
+    # the lane's request came back requeued, not resurrected mid-lane
+    assert eng2._lane is None
+    assert eng2.status(mid_rid) == RequestStatus.WAITING
+    assert len(eng2._outputs[mid_rid]) == 0
+    _drain_bitwise(eng2, reqs, want)
+    eng2.close()

@@ -1,6 +1,8 @@
 """Continuous-batching serve engine: slot admission/eviction/backfill,
 truncation, determinism, and the slot-cache primitives."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,10 +12,14 @@ from repro.arch.model_zoo import build
 from repro.configs.registry import get
 from repro.serve import kvcache
 from repro.serve.engine import (
+    DurabilityConfig,
     Engine,
+    KernelConfig,
+    KVConfig,
     Request,
     RequestResult,
     RequestStatus,
+    SchedulerConfig,
     ServeConfig,
     StaticEngine,
 )
@@ -470,6 +476,255 @@ def test_serveconfig_lifecycle_validation():
         )
     # pinning decode_block == block_size is the documented oracle idiom
     ServeConfig(kv_layout="paged", max_len=64, block_size=16, decode_block=16)
+
+
+# ------------------------------------------------ nested config / shims --
+
+
+def test_flat_kwargs_map_to_nested_and_warn_once():
+    with pytest.warns(DeprecationWarning) as rec:
+        flat = ServeConfig(
+            batch=3, max_len=64, kv_layout="paged", block_size=16,
+            matmul="xla", snapshot_every=8,
+        )
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
+    nested = ServeConfig(
+        max_len=64,
+        scheduler=SchedulerConfig(batch=3),
+        kv=KVConfig(layout="paged", block_size=16),
+        kernel=KernelConfig(matmul="xla"),
+        durability=DurabilityConfig(snapshot_every=8),
+    )
+    assert flat == nested
+    # flat read-through properties keep the old spelling alive
+    assert flat.batch == 3 and flat.kv_layout == "paged"
+    assert flat.block_size == 16 and flat.snapshot_every == 8
+
+
+def test_unknown_flat_kwarg_rejected():
+    with pytest.raises(TypeError, match="blocksize"):
+        ServeConfig(blocksize=16)
+
+
+def test_nested_validation_is_eager():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        SchedulerConfig(prefill_chunk=-1)
+    with pytest.raises(ValueError, match="token_budget"):
+        ServeConfig(token_budget=64)  # only meaningful with chunked prefill
+    with pytest.raises(ValueError, match="token_budget"):
+        ServeConfig(prefill_chunk=16, token_budget=8)  # budget < one chunk
+    with pytest.raises(ValueError, match="multiple of prefill_chunk"):
+        ServeConfig(max_len=100, prefill_chunk=16)
+    with pytest.raises(ValueError, match="kv_layout"):
+        KVConfig(layout="bogus")
+    with pytest.raises(ValueError, match="matmul"):
+        KernelConfig(matmul="cuda")
+
+
+def test_flat_replace_and_fingerprint_compat():
+    from repro.serve.recovery import _scfg_fingerprint
+
+    with pytest.warns(DeprecationWarning):
+        flat = ServeConfig(batch=2, max_len=64, kv_layout="paged", block_size=16)
+    nested = ServeConfig(
+        max_len=64,
+        scheduler=SchedulerConfig(batch=2),
+        kv=KVConfig(layout="paged", block_size=16),
+    )
+    # old-flat and new-nested spellings of the same engine fingerprint equal
+    assert _scfg_fingerprint(flat) == _scfg_fingerprint(nested)
+    # dataclasses.replace with top-level and (shimmed) flat keys still works
+    assert dataclasses.replace(nested, seed=5).seed == 5
+    with pytest.warns(DeprecationWarning):
+        r = dataclasses.replace(nested, stall_patience=7)
+    assert r.stall_patience == 7 and r.kv == nested.kv
+    # chunking is pure scheduling: the bitwise stream (and so the snapshot
+    # fingerprint) is unchanged
+    chunked = dataclasses.replace(
+        nested, scheduler=SchedulerConfig(batch=2, prefill_chunk=16)
+    )
+    assert _scfg_fingerprint(chunked) == _scfg_fingerprint(nested)
+
+
+def test_request_dataclass_and_kwargs_shim():
+    p = np.asarray([1, 2, 3], np.int32)
+    r = Request(p, max_new_tokens=5)
+    assert r.max_new == 5 and r.max_new_tokens == 5
+    assert Request(p).max_new == 16
+    with pytest.raises(TypeError, match="max_new"):
+        Request(p, max_new=4, max_new_tokens=5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        r.max_new = 9
+
+
+# ------------------------------------- unified scheduler (chunked prefill) --
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_chunked_prefill_bitwise_vs_monolithic(smol, layout):
+    """The tentpole invariant: chunked prefill under any (chunk, budget) is
+    pure scheduling — outputs agree bitwise with monolithic admission (the
+    degenerate prefill_chunk=0 engine), per layout."""
+    cfg, params = smol
+    kv = KVConfig(layout=layout, block_size=16) if layout == "paged" \
+        else KVConfig()
+    base = dict(max_len=64, temperature=0.8, seed=11, kv=kv)
+    spec = [(5, 6), (37, 9), (3, 4), (23, 5), (58, 4), (12, 7)]
+    mono = Engine(
+        cfg, params, ServeConfig(scheduler=SchedulerConfig(batch=3), **base)
+    ).run(_reqs(cfg, spec, seed=5))
+    assert all(m.status == RequestStatus.FINISHED for m in mono)
+    # chunk >= longest prompt with no budget degenerates to monolithic;
+    # chunk=8 at budget=8 is maximal interleaving (one chunk per step)
+    for chunk, budget in ((8, 8), (16, 32), (64, None)):
+        outs = Engine(
+            cfg,
+            params,
+            ServeConfig(
+                scheduler=SchedulerConfig(
+                    batch=3, prefill_chunk=chunk, token_budget=budget
+                ),
+                **base,
+            ),
+        ).run(_reqs(cfg, spec, seed=5))
+        for i, (m, c) in enumerate(zip(mono, outs)):
+            assert c.status == RequestStatus.FINISHED
+            assert np.array_equal(m.tokens, c.tokens), (
+                f"chunk={chunk} budget={budget} rid {i}: "
+                f"{c.tolist()} != monolithic {m.tolist()}"
+            )
+
+
+def test_prefilling_status_observable_and_ttft(smol):
+    """A budget-bound long prompt is observable PREFILLING (non-consuming
+    pop_result snapshot included) for exactly ceil(plen/chunk) steps, and
+    ttft_steps reports submit->first-token in engine steps."""
+    cfg, params = smol
+    eng = Engine(
+        cfg,
+        params,
+        ServeConfig(
+            max_len=64,
+            scheduler=SchedulerConfig(batch=2, prefill_chunk=8, token_budget=8),
+        ),
+    )
+    rng = np.random.default_rng(23)
+    rid = eng.submit(Request(rng.integers(0, cfg.vocab, 40).astype(np.int32), 4))
+    seen = 0
+    while eng.status(rid) in (RequestStatus.WAITING, RequestStatus.PREFILLING):
+        snap = eng.pop_result(rid)  # live snapshot, not consumed
+        assert len(snap) == 0
+        eng.step()
+        if eng.status(rid) == RequestStatus.PREFILLING:
+            seen += 1
+    assert seen == 4  # ceil(40/8) = 5 chunks, ACTIVE right after the 5th
+    while eng.step():
+        pass
+    res = eng.pop_result(rid)
+    assert res.status == RequestStatus.FINISHED
+    assert res.ttft_steps == 5 and len(res) == 4
+
+
+def test_preempt_mid_prefill_recovers_bitwise(smol):
+    """An interactive arrival takes the lane between chunks: the bulk
+    victim drops its half-built scratch (blocks released, zero tokens
+    emitted), requeues, re-prefills later, and still finishes bitwise
+    identical to an undisturbed run."""
+    cfg, params = smol
+    scfg = ServeConfig(
+        max_len=64,
+        temperature=0.7,
+        seed=13,
+        scheduler=SchedulerConfig(batch=1, prefill_chunk=8, token_budget=8),
+        kv=KVConfig(layout="paged", block_size=16),
+    )
+    eng = Engine(cfg, params, scfg)
+    rng = np.random.default_rng(29)
+    bulk = rng.integers(0, cfg.vocab, 40).astype(np.int32)
+    inter = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    eng.submit(Request(bulk, 5, request_id=0, priority=0))
+    eng.step()  # one 8-token chunk in
+    assert eng.status(0) == RequestStatus.PREFILLING
+    eng.submit(Request(inter, 3, request_id=1, priority=5))
+    eng.step()  # priority takeover at the chunk boundary
+    assert eng.status(0) == RequestStatus.PREEMPTED
+    assert eng.status(1) in (RequestStatus.PREFILLING, RequestStatus.ACTIVE)
+    while eng.step():
+        pass
+    r0, r1 = eng.pop_result(0), eng.pop_result(1)
+    assert r1.status == RequestStatus.FINISHED and r1.preemptions == 0
+    assert r0.status == RequestStatus.FINISHED and r0.preemptions == 1
+    solo = Engine(cfg, params, scfg).run([Request(bulk, 5, request_id=0)])[0]
+    assert np.array_equal(r0.tokens, solo.tokens)
+    solo1 = Engine(cfg, params, scfg).run([Request(inter, 3, request_id=1)])[0]
+    assert np.array_equal(r1.tokens, solo1.tokens)
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1, "leaked blocks"
+
+
+def test_cancel_and_deadline_mid_prefill(smol):
+    """cancel() and deadline expiry both reach a PREFILLING request: the
+    lane drops with zero tokens, blocks return to the pool, and the slot
+    backfills."""
+    cfg, params = smol
+    scfg = ServeConfig(
+        max_len=64,
+        scheduler=SchedulerConfig(batch=1, prefill_chunk=8, token_budget=8),
+        kv=KVConfig(layout="paged", block_size=16),
+    )
+    eng = Engine(cfg, params, scfg)
+    rng = np.random.default_rng(31)
+    long_p = rng.integers(0, cfg.vocab, 40).astype(np.int32)
+    eng.submit(Request(long_p, 4, request_id=0))
+    eng.step()
+    assert eng.status(0) == RequestStatus.PREFILLING
+    assert eng.cancel(0) == RequestStatus.CANCELLED
+    assert len(eng.pop_result(0)) == 0
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+    eng.submit(Request(long_p, 4, request_id=1, deadline_steps=2))
+    while eng.step():
+        pass
+    res = eng.pop_result(1)
+    assert res.status == RequestStatus.FAILED
+    assert "prefilling" in res.reason
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+
+def test_per_request_seed_and_on_token(smol):
+    """Request.seed overrides the engine seed for that request's sampling
+    chain (engine-seed-independent), and Request.on_token streams tokens
+    without a step-level callback."""
+    cfg, params = smol
+    rng = np.random.default_rng(37)
+    p = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+
+    def out(engine_seed, req_seed):
+        scfg = ServeConfig(
+            max_len=64, temperature=0.9, seed=engine_seed,
+            scheduler=SchedulerConfig(batch=1),
+        )
+        return Engine(cfg, params, scfg).run(
+            [Request(p, 12, request_id=0, seed=req_seed)]
+        )[0].tolist()
+
+    base = out(3, None)
+    assert out(3, 3) == base          # explicit seed == engine default
+    assert out(99, 3) == base         # request seed wins over engine seed
+    assert out(3, 4) != base          # different seed, different stream
+
+    events = []
+    eng = Engine(
+        cfg, params,
+        ServeConfig(max_len=64, scheduler=SchedulerConfig(batch=1)),
+    )
+    eng.submit(Request(
+        p, 4, request_id=0,
+        on_token=lambda rid, tok, idx, done: events.append((rid, idx, done)),
+    ))
+    while eng.step():
+        pass
+    assert [e[1] for e in events] == [0, 1, 2, 3]
+    assert events[-1][2] and all(rid == 0 for rid, _, _ in events)
 
 
 # ----------------------------------------------------- kvcache primitives --
