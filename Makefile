@@ -14,9 +14,12 @@ FMT_PATHS := src/repro/serve benchmarks/serve_bench.py \
 CHAOS_EPISODES ?= 200
 # crash-restart episodes are pricier (each compiles a fresh engine pair)
 RECOVERY_EPISODES ?= 6
+# seeded silent-data-corruption episodes (make test-sdc); override like
+# SDC_EPISODES=1 SDC_SEED=<seed> to replay one failing episode
+SDC_EPISODES ?= 4
 
 .PHONY: test test-fast test-fuzz test-chaos test-recovery test-scheduler \
-        lint validate \
+        test-sdc lint validate \
         bench bench-mapper bench-simulate bench-dse bench-serve bench-check
 
 # tier-1 verify: the full suite (matches ROADMAP.md)
@@ -27,7 +30,7 @@ test:
 # and chaos suites (CI runs those as their own named steps; `make test`
 # runs all, with the chaos suite at its small in-suite episode count)
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow and not fuzz and not chaos and not recovery"
+	$(PY) -m pytest -x -q -m "not slow and not fuzz and not chaos and not recovery and not sdc"
 
 # seeded randomized property suites (paged-KV differential traces, serve
 # fuzz).  Deterministic by default; crank locally with FUZZ_EXAMPLES=N
@@ -54,6 +57,13 @@ test-scheduler:
 # restore from snapshot + journal, and require bitwise oracle agreement
 test-recovery:
 	RECOVERY_EPISODES=$(RECOVERY_EPISODES) $(PY) -m pytest -q -m recovery
+
+# seeded silent-data-corruption matrix (serve/chaos.py bit flips against
+# the abft=checksum engine): every fired compute fault must be detected
+# and retried, every KV flip quarantined leak-free, and survivors must
+# stay bitwise identical to the no-fault oracle
+test-sdc:
+	SDC_EPISODES=$(SDC_EPISODES) $(PY) -m pytest -q -m sdc
 
 lint:
 	ruff check .

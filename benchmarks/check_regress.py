@@ -230,6 +230,42 @@ def main() -> None:
             f"{adm['itl_p95_vs_storm_free']:.2f}x the storm-free baseline "
             "(ceiling 1.15x)"
         )
+    # PR 9: the ABFT/SDC phase must keep checksums near-free (abft-on ITL
+    # p95 within 1.10x of abft-off — a timing gate read from the committed
+    # JSON like the other ceilings) and exact: zero detections on clean
+    # traffic, clean tokens bitwise identical to the unchecked engine, and
+    # 100% detection/quarantine of the fired seeded faults
+    if serve_f("sdc.overhead.abft_itl_p95_vs_off") > 1.10:
+        sys.exit(
+            "committed BENCH_serve.json: abft-on ITL p95 "
+            f"{serve_f('sdc.overhead.abft_itl_p95_vs_off'):.2f}x the "
+            "abft-off baseline (ceiling 1.10x)"
+        )
+    if serve_f("sdc.clean_false_positives") != 0:
+        sys.exit(
+            "committed BENCH_serve.json: abft flagged "
+            f"{serve_f('sdc.clean_false_positives')} faults on clean "
+            "traffic — the checksum tolerance has gone trigger-happy"
+        )
+    if not serve_f("sdc.bitwise_identical_to_off"):
+        sys.exit(
+            "committed BENCH_serve.json: abft-on tokens diverged from the "
+            "unchecked engine — the checksum side-channel perturbed the "
+            "product"
+        )
+    sdc_det = serve_f("sdc.detection")
+    if sdc_det["injected_compute"] < 1 or sdc_det["injected_kv"] < 1:
+        sys.exit(
+            "committed BENCH_serve.json: the SDC phase fired no "
+            f"{'compute' if sdc_det['injected_compute'] < 1 else 'KV'} "
+            "faults — the detection rates prove nothing"
+        )
+    if sdc_det["detection_rate"] < 1.0 or sdc_det["kv_detection_rate"] < 1.0:
+        sys.exit(
+            "committed BENCH_serve.json: SDC detection below 100% "
+            f"(compute {sdc_det['detection_rate']:.2f}, "
+            f"kv {sdc_det['kv_detection_rate']:.2f})"
+        )
 
     failures = []
 
@@ -264,6 +300,9 @@ def main() -> None:
         fault_storm=False,
         crash_recovery=False,
         admission_storm=False,
+        # the reduced-budget fresh_sdc pass below gates the SDC
+        # invariants; the full phase re-runs the mid-size overhead A/B
+        sdc=False,
     )
     if not fresh_serve["solo_outputs_identical"]:
         failures.append("serve solo-bitwise")
@@ -395,6 +434,33 @@ def main() -> None:
     )
     if not adm_ok:
         failures.append("admission-storm invariants")
+
+    # PR 9: fresh ABFT/SDC pass on a reduced budget.  Only the exact
+    # invariants are gated (100% detection of fired faults, zero clean
+    # false positives, clean tokens bitwise equal to the unchecked
+    # engine) — the ITL overhead ceiling is a timing claim checked
+    # against the committed JSON above.  Every episode also re-asserts
+    # the full detect->localize->retry->quarantine ledger internally.
+    fresh_sdc = serve_bench.bench_sdc(
+        cfg, params, slots=2, seed=0, n_requests=6, repeats=1, episodes=2
+    )
+    det = fresh_sdc["detection"]
+    sdc_ok = (
+        fresh_sdc["clean_false_positives"] == 0
+        and fresh_sdc["bitwise_identical_to_off"]
+        and det["detection_rate"] >= 1.0
+        and det["kv_detection_rate"] >= 1.0
+        and det["injected_compute"] + det["injected_kv"] >= 1
+    )
+    print(
+        f"[{'ok  ' if sdc_ok else 'FAIL'}] sdc/abft: "
+        f"detected={det['detected']}/{det['injected_compute']} "
+        f"quarantined={det['quarantined']}/{det['injected_kv']} "
+        f"clean_fps={fresh_sdc['clean_false_positives']} "
+        f"bitwise={fresh_sdc['bitwise_identical_to_off']}"
+    )
+    if not sdc_ok:
+        failures.append("sdc/abft invariants")
 
     if args.full:
         fresh_sweep = perf_compare.bench_network_sweep()

@@ -29,6 +29,15 @@ Phases, emitted together as BENCH_serve.json:
     within 1.15x of storm-free, bitwise identical to the monolithic
     oracle (including mid-prefill lane preemptions) with zero leaked
     blocks.
+  * **abft on vs off** (SDC defense in depth): paired clean-traffic A/B of
+    the paged engine with ``abft="checksum"`` vs ``"off"`` on a scaled-up
+    model (the surcharge is per-step work a dispatch-dominated smoke
+    config cannot amortize) — ITL p95 ratio must stay <= 1.10x with the
+    weight scrub amortized over ``scrub_every`` steps, the clean window
+    must log zero detections (no false positives) with tokens bitwise
+    identical to the unchecked engine, and seeded bit-flip episodes on
+    the strict every-step-scrub config must detect 100% of fired compute
+    faults and quarantine 100% of fired KV flips.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--requests N] [--out F]
 
@@ -41,6 +50,7 @@ gap) so queue depth no longer pollutes the per-token tail.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import shutil
@@ -50,14 +60,20 @@ import time
 import numpy as np
 
 
-def make_workload(vocab: int, n: int, seed: int, id_base: int = 0):
+def make_workload(
+    vocab: int,
+    n: int,
+    seed: int,
+    id_base: int = 0,
+    decode_range: tuple[int, int] = (4, 21),
+):
     from repro.serve.engine import Request
 
     rng = np.random.default_rng(seed)
     return [
         Request(
             prompt=rng.integers(0, vocab, rng.integers(3, 17)).astype(np.int32),
-            max_new_tokens=int(rng.integers(4, 21)),
+            max_new_tokens=int(rng.integers(*decode_range)),
             request_id=id_base + i,
         )
         for i in range(n)
@@ -700,6 +716,189 @@ def bench_crash_recovery(
     }
 
 
+# ---------------------------------------------------------- sdc/abft phase
+
+
+def bench_sdc(
+    cfg,
+    params,
+    slots: int,
+    seed: int,
+    n_requests: int = 16,
+    max_len: int = 64,
+    block_size: int = 8,
+    repeats: int = 3,
+    episodes: int = 4,
+    overhead_cfg=None,
+    overhead_slots: int | None = None,
+    scrub_every: int = 100,
+) -> dict:
+    """ABFT price + proof (kernels/abft.py, the serve-engine SDC pipeline).
+
+    **overhead**: paired A/B of the same paged engine config with
+    ``abft="checksum"`` vs ``abft="off"`` on clean traffic — the median
+    per-pair ITL p95 ratio is the steady-state price of checksummed
+    matmuls, the decode-attention fingerprint, and the amortized weight
+    scrub (``scrub_every``; every 1/scrub_every-th step re-reads all
+    params).  When ``overhead_cfg`` is given the pair runs on that
+    (larger) model with fresh params: the ABFT surcharge is per-step
+    work that a dispatch-dominated smoke model cannot amortize, so the
+    price is only meaningful where decode is compute/memory bound.  The
+    clean window doubles as the false-positive gate: the abft engine's
+    detection counters must not move, and its tokens must stay bitwise
+    identical to the unchecked engine (the checksum side-channel must
+    never perturb the product).
+
+    **detection**: seeded fault episodes through ``chaos.run_sdc_episode``
+    on the small config (default ``scrub_every=1``, the strictest
+    setting) — deterministic (n_compute, n_kv) mixes so both fault
+    surfaces fire even at a reduced episode count.  Every episode
+    internally asserts the full detect -> localize -> retry -> quarantine
+    contract against a contiguous bitwise oracle; the emitted rates
+    re-state the aggregate so check_regress can gate them from the
+    committed JSON."""
+    from repro.arch.model_zoo import build
+    from repro.serve import chaos
+    from repro.serve.engine import (
+        Engine,
+        KernelConfig,
+        KVConfig,
+        SchedulerConfig,
+        ServeConfig,
+    )
+
+    ocfg, oparams, oslots = cfg, params, slots
+    if overhead_cfg is not None:
+        import jax
+
+        ocfg = overhead_cfg
+        oparams = build(ocfg).init(jax.random.PRNGKey(seed))
+        oslots = overhead_slots or slots
+
+    common = dict(max_len=max_len, seed=seed)
+    osched = SchedulerConfig(batch=oslots, prefill_bucket=16)
+    paged = KVConfig(layout="paged", block_size=block_size)
+    # long decodes so ITL gaps dominate TTFT noise and the 1/scrub_every
+    # slow-step fraction sits below the p95 cut instead of straddling it
+    decode_range = (24, 41)
+
+    with Engine(
+        ocfg,
+        oparams,
+        ServeConfig(
+            scheduler=osched,
+            kv=paged,
+            kernel=KernelConfig(abft="checksum", scrub_every=scrub_every),
+            **common,
+        ),
+    ) as on, Engine(
+        ocfg, oparams, ServeConfig(scheduler=osched, kv=paged, **common)
+    ) as off:
+        warm = make_workload(
+            ocfg.vocab, n_requests, seed, id_base=95_000, decode_range=decode_range
+        )
+        on.run(list(warm))
+        off.run(list(warm))
+
+        # --- clean paired overhead + false-positive window ----------------
+        det0 = on.stats["sdc_detected"] + on.stats["quarantined"]
+        pairs = []
+        for r in range(repeats):
+            reqs = make_workload(
+                ocfg.vocab,
+                n_requests,
+                seed,
+                id_base=r * 1000,
+                decode_range=decode_range,
+            )
+            a = _drive(lambda rs, cb: on.run(rs, on_token=cb), list(reqs))
+            b = _drive(lambda rs, cb: off.run(rs, on_token=cb), list(reqs))
+            agree = a.pop("outputs") == b.pop("outputs")
+            pairs.append(
+                (a["itl_p95_ms"] / max(1e-9, b["itl_p95_ms"]), a, b, agree)
+            )
+        pairs.sort(key=lambda p: p[0])
+        ratio, med_a, med_b, _ = pairs[len(pairs) // 2]
+        clean_detections = (
+            on.stats["sdc_detected"] + on.stats["quarantined"] - det0
+        )
+        keys = ("tokens_per_s", "itl_p50_ms", "itl_p95_ms")
+        overhead = {
+            "abft_on": {k: med_a[k] for k in keys},
+            "abft_off": {k: med_b[k] for k in keys},
+            "itl_p95_ratio_runs": [p[0] for p in pairs],
+            "abft_itl_p95_vs_off": ratio,
+        }
+
+    # --- seeded detection episodes (small config, scrub every step) -------
+    with Engine(
+        cfg,
+        params,
+        ServeConfig(
+            scheduler=SchedulerConfig(batch=slots, prefill_bucket=16),
+            kv=paged,
+            kernel=KernelConfig(abft="checksum"),
+            **common,
+        ),
+    ) as ep_on, Engine(
+        cfg,
+        params,
+        ServeConfig(
+            scheduler=SchedulerConfig(batch=slots, prefill_bucket=16),
+            kv=KVConfig(decode_block=block_size),
+            **common,
+        ),
+    ) as oracle_eng:
+        mixes = [(1, 1), (2, 1), (1, 2), (2, 0)]
+        reports = []
+        for ep in range(episodes):
+            n_compute, n_kv = mixes[ep % len(mixes)]
+            ep_seed = seed + chaos.SEED_STRIDE + ep
+            rng = np.random.default_rng(ep_seed)
+            reqs = chaos.make_sdc_workload(rng, cfg.vocab, max_len)
+            want = chaos.oracle_outputs(oracle_eng, reqs)
+            reports.append(
+                chaos.run_sdc_episode(
+                    ep_on, want, reqs, ep_seed, n_compute=n_compute, n_kv=n_kv
+                )
+            )
+        fired_compute = sum(r.injected["compute"] for r in reports)
+        fired_kv = sum(r.injected["kv"] for r in reports)
+        detection = {
+            "episodes": episodes,
+            "injected_compute": fired_compute,
+            "detected": sum(r.detected for r in reports),
+            "detection_rate": (
+                sum(r.detected for r in reports) / fired_compute
+                if fired_compute
+                else 1.0
+            ),
+            "injected_kv": fired_kv,
+            "quarantined": sum(r.quarantined for r in reports),
+            "kv_detection_rate": (
+                sum(r.quarantined for r in reports) / fired_kv
+                if fired_kv
+                else 1.0
+            ),
+            "retried": sum(r.retried for r in reports),
+        }
+
+    return {
+        "abft_mode": "checksum",
+        "block_size": block_size,
+        "requests": n_requests,
+        "repeats": repeats,
+        "scrub_every": scrub_every,
+        "overhead_model": ocfg.name,
+        "overhead_slots": oslots,
+        "overhead": overhead,
+        # invariants: every pair bitwise, zero detections on clean traffic
+        "bitwise_identical_to_off": all(p[3] for p in pairs),
+        "clean_false_positives": clean_detections,
+        "detection": detection,
+    }
+
+
 # ------------------------------------------------ admission-storm phase
 
 
@@ -1181,6 +1380,7 @@ def run(
     fault_storm: bool = True,
     crash_recovery: bool = True,
     admission_storm: bool = True,
+    sdc: bool = True,
     # serving-sized cache for the substrate A/B: at the smoke models' tiny
     # dims the decode step is fixed-overhead dominated, so the oracle's
     # max_len scan only becomes visible at a real cache extent
@@ -1304,6 +1504,32 @@ def run(
         )
     if admission_storm:
         result["admission_storm"] = bench_admission_storm(cfg, params, seed)
+    if sdc:
+        # the ABFT price is meaningless on a dispatch-dominated smoke
+        # model, so the overhead A/B runs a scaled-up variant where decode
+        # steps are genuinely memory/compute bound; detection episodes
+        # stay on the smoke config (their contract is exactness, not time)
+        sdc_overhead_cfg = dataclasses.replace(
+            cfg,
+            name=f"{cfg.name}-sdc-overhead",
+            n_layers=6,
+            d_model=512,
+            d_ff=1536,
+            vocab=16384,
+            n_heads=8,
+            n_kv_heads=2,
+            head_dim=64,
+        )
+        result["sdc"] = bench_sdc(
+            cfg,
+            params,
+            slots,
+            seed,
+            n_requests=32,
+            repeats=5,
+            overhead_cfg=sdc_overhead_cfg,
+            overhead_slots=32,
+        )
     if scaling:
         result["decode_step_scaling"] = bench_decode_scaling(
             cfg, params, slots, ab_max_len, seed
@@ -1374,6 +1600,18 @@ def run(
             f"leaked={st['leaked_blocks']} "
             f"lane_preemptions={st['lane_preemptions']}"
         )
+    if sdc:
+        sd = result["sdc"]
+        det = sd["detection"]
+        print(
+            f"sdc: abft ITL p95 {sd['overhead']['abft_itl_p95_vs_off']:.2f}x "
+            f"off ({sd['overhead_model']}, {sd['overhead_slots']} slots, "
+            f"scrub_every={sd['scrub_every']}) | detection "
+            f"{det['detected']}/{det['injected_compute']} "
+            f"compute, {det['quarantined']}/{det['injected_kv']} kv | "
+            f"clean false positives={sd['clean_false_positives']} "
+            f"bitwise_vs_off={sd['bitwise_identical_to_off']}"
+        )
     if scaling:
         sc = result["decode_step_scaling"]
         print(
@@ -1431,6 +1669,11 @@ def main():
         action="store_true",
         help="skip the chunked-vs-monolithic admission-storm phase",
     )
+    ap.add_argument(
+        "--no-sdc",
+        action="store_true",
+        help="skip the ABFT overhead + seeded bit-flip detection phase",
+    )
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     run(
@@ -1446,6 +1689,7 @@ def main():
         fault_storm=not args.no_fault_storm,
         crash_recovery=not args.no_crash_recovery,
         admission_storm=not args.no_admission_storm,
+        sdc=not args.no_sdc,
     )
 
 

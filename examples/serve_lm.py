@@ -31,11 +31,6 @@ def main():
     cfg = get("smollm-360m-smoke")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(
-        cfg, params,
-        ServeConfig(max_len=128, scheduler=SchedulerConfig(batch=4)),
-    )
-
     rng = np.random.default_rng(0)
     requests = [
         Request(rng.integers(0, cfg.vocab, n).astype(np.int32), max_new=m)
@@ -52,21 +47,27 @@ def main():
         tail = "  <done>" if done else ""
         print(f"  stream req{rid}[{idx}] = {tok}{tail}")
 
-    rids = [engine.submit(r) for r in requests]
-    engine.step(on_token)
-    engine.step(on_token)
-    # the client for request 1 hung up two steps in: cancel mid-flight —
-    # its slot frees immediately and is backfilled on the next step
-    print(f"cancel req{rids[1]} -> {engine.cancel(rids[1]).value}")
-    while engine.step(on_token):
-        pass
+    # the engine is a context manager: __exit__ drains durability workers
+    # and releases the KV pool even if the block raises
+    with Engine(
+        cfg, params,
+        ServeConfig(max_len=128, scheduler=SchedulerConfig(batch=4)),
+    ) as engine:
+        rids = [engine.submit(r) for r in requests]
+        engine.step(on_token)
+        engine.step(on_token)
+        # the client for request 1 hung up two steps in: cancel mid-flight —
+        # its slot frees immediately and is backfilled on the next step
+        print(f"cancel req{rids[1]} -> {engine.cancel(rids[1]).value}")
+        while engine.step(on_token):
+            pass
 
-    for i, rid in enumerate(rids):
-        res = engine.pop_result(rid)  # typed: (status, tokens, reason, ...)
-        why = f" ({res.reason})" if res.reason else ""
-        print(f"request {rid}: prompt_len={len(requests[i].prompt)} "
-              f"status={res.status.value}{why} ttft_steps={res.ttft_steps} "
-              f"generated={res.tolist()}")
+        for i, rid in enumerate(rids):
+            res = engine.pop_result(rid)  # typed: (status, tokens, ...)
+            why = f" ({res.reason})" if res.reason else ""
+            print(f"request {rid}: prompt_len={len(requests[i].prompt)} "
+                  f"status={res.status.value}{why} "
+                  f"ttft_steps={res.ttft_steps} generated={res.tolist()}")
 
     # ---- unified scheduler: chunked prefill interleaved with decode -------
     # prefill_chunk tiles each admission prefill into fixed-size chunks and
@@ -75,7 +76,7 @@ def main():
     # unset and chunk >= prompt it degenerates to monolithic admission —
     # outputs are bitwise identical either way.
     print("\n--- unified scheduler (chunked prefill) demo ---")
-    chunked = Engine(
+    with Engine(
         cfg, params,
         ServeConfig(
             max_len=128,
@@ -83,19 +84,19 @@ def main():
                 batch=4, prefill_chunk=16, token_budget=16
             ),
         ),
-    )
-    long_prompt = rng.integers(0, cfg.vocab, 100).astype(np.int32)
-    rid = chunked.submit(Request(long_prompt, max_new=4))
-    while True:
-        alive = chunked.step()
-        status = chunked.status(rid).value
-        if status == "PREFILLING":
-            print(f"  req{rid} PREFILLING (16-token chunks under budget)")
-        if not alive:
-            break
-    res = chunked.pop_result(rid)
-    print(f"request {rid}: status={res.status.value} "
-          f"ttft_steps={res.ttft_steps} generated={res.tolist()}")
+    ) as chunked:
+        long_prompt = rng.integers(0, cfg.vocab, 100).astype(np.int32)
+        rid = chunked.submit(Request(long_prompt, max_new=4))
+        while True:
+            alive = chunked.step()
+            status = chunked.status(rid).value
+            if status == "PREFILLING":
+                print(f"  req{rid} PREFILLING (16-token chunks under budget)")
+            if not alive:
+                break
+        res = chunked.pop_result(rid)
+        print(f"request {rid}: status={res.status.value} "
+              f"ttft_steps={res.ttft_steps} generated={res.tolist()}")
 
     # ---- kill and resume: crash-consistent serving (serve/recovery.py) ----
     # A snapshot_dir arms durability: atomic snapshots every snapshot_every

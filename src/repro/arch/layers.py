@@ -104,6 +104,11 @@ class prefill_aligned:
 _MATMUL_IMPL: list = [None]
 _ATTENTION_IMPL: list = [None]
 _DECODE_BLOCK: list = [None]
+#   * _ABFT: an AbftTrace (kernels/abft.py) or None.  When set, every
+#     projection routed through _mm gets a column-checksum verify and the
+#     paged decode-attention output gets a sampled-row fingerprint check;
+#     the trace also carries the seeded fault operand for SDC injection.
+_ABFT: list = [None]
 
 
 class _override:
@@ -137,11 +142,24 @@ def decode_block_override(bk: int | None) -> _override:
     return _override(_DECODE_BLOCK, bk)
 
 
+def abft_override(trace) -> _override:
+    return _override(_ABFT, trace)
+
+
+def abft_active():
+    """The installed AbftTrace, if any (scan bodies consult it to drain
+    per-layer verdicts and to tag the traced layer index)."""
+    return _ABFT[0]
+
+
 def _mm(x: jax.Array, w: jax.Array) -> jax.Array:
     impl = _MATMUL_IMPL[0]
-    if impl is None:
-        return x @ w
-    return impl(x, w)
+    trace = _ABFT[0]
+    if trace is not None:
+        # the trace owns the matmul: it appends the e^T·x checksum row so
+        # the ABFT reference rides the product GEMM (kernels/abft.py)
+        return trace.mm(x, w, impl)
+    return x @ w if impl is None else impl(x, w)
 
 
 def init_kv_cache(
@@ -254,8 +272,9 @@ def multihead_attention(
         from repro.kernels.flash_attention.ops import decode_attention_paged
 
         g = h // kv
+        qg = q.reshape(B, kv, g, hd)
         ctx = decode_attention_paged(
-            q.reshape(B, kv, g, hd),
+            qg,
             kpool, vpool, cache["table"], p_ins + 1,
             # supports_paged admits only all-global configs, so the scanned
             # per-layer window (traced here) is always the 2^30 sentinel
@@ -263,8 +282,13 @@ def multihead_attention(
             # "flash" -> backend auto (Pallas on TPU, jnp twin on CPU);
             # oracle-mode engines pin the exact gather twin
             impl=None if attn_impl == "flash" else "xla",
-        ).reshape(B, Tq, h * hd)
-        return _mm(ctx, params["wo"]), new_cache
+        )
+        trace = _ABFT[0]
+        if trace is not None:
+            ctx = trace.check_paged_attention(
+                ctx, qg, kpool, vpool, cache["table"], p_ins + 1
+            )
+        return _mm(ctx.reshape(B, Tq, h * hd), params["wo"]), new_cache
     if cache is not None:
         size = cache["k"].shape[1]
         # per-row insert positions (rows may differ under slot batching)

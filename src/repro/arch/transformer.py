@@ -221,22 +221,40 @@ class Model:
                     size = caches["k"].shape[2]
                     ragged = bool((layer_windows(cfg) >= size).all())
 
-            def body(x, p_c_w):
-                p, c, w = p_c_w
+            def body(x, p_c_w_i):
+                p, c, w, li = p_c_w_i
+                trace = L.abft_active()
+                if trace is not None:
+                    trace.layer = li
                 y, nc, aux = attn_block_apply(
                     p, cfg, x, window=w, positions=positions, cache=c,
                     ragged_ok=ragged,
                 )
-                return y, (nc, aux)
+                # a scanned body must not leak traced values through the
+                # trace's Python-side flag list: drain the layer's ABFT
+                # verdicts into a scanned output instead
+                flag = (
+                    trace.drain() if trace is not None
+                    else jnp.zeros((), jnp.bool_)
+                )
+                return y, (nc, aux, flag)
 
         if remat:
             body = jax.checkpoint(body, policy=remat_policy_of(cfg))
 
         if cfg.mixer == "rwkv6":
             xs = (params["layers"], caches)
+            x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
         else:
-            xs = (params["layers"], caches, jnp.asarray(layer_windows(cfg)))
-        x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+            xs = (
+                params["layers"], caches, jnp.asarray(layer_windows(cfg)),
+                jnp.arange(cfg.n_layers),
+            )
+            x, (new_caches, auxs, flags) = jax.lax.scan(body, x, xs)
+            trace = L.abft_active()
+            if trace is not None:
+                trace.layer = None
+                trace.flags.append(jnp.any(flags))
         return x, new_caches, jnp.sum(auxs)
 
     def _split_groups(self, params):

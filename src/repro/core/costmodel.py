@@ -492,6 +492,30 @@ class BatchedCostModel:
             macs=self.macs,
         )
 
+    def abft_energy_pj(self, tilings: np.ndarray) -> np.ndarray:
+        """Per-candidate ABFT checksum surcharge (energy.abft_matmul_cost)
+        for a matmul nest: each candidate's row-block is the M footprint
+        it keeps resident below the outermost level, which is exactly the
+        ``bm`` matmul_pallas_abft emits one checksum row per.  Lets the
+        blocking sweep report checked-matmul energy as base + surcharge
+        without re-counting the O(M·K·N) product."""
+        dims = {d: i for i, d in enumerate(self.dims)}
+        if not {"M", "N", "K"} <= set(dims):
+            raise ValueError(
+                f"abft pricing needs a matmul nest with M/N/K dims, got "
+                f"{self.dims}"
+            )
+        tilings = np.asarray(tilings, dtype=np.int64)
+        M = self.nest.bounds["M"]
+        N = self.nest.bounds["N"]
+        K = self.nest.bounds["K"]
+        t_outer = np.maximum(tilings[:, -1, dims["M"]], 1)
+        bm = np.maximum(-(-M // t_outer), 1)
+        nrb = -(-M // bm)
+        ops = (nrb * K * N) + (M * N + M * K + nrb * N)
+        words = M * K + 2 * nrb * N
+        return ops * self.table.mac_pj + words * self.pj[-1]
+
     def level_energy(
         self, tilings: np.ndarray, orders: np.ndarray, level: int
     ) -> np.ndarray:

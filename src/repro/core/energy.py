@@ -70,6 +70,57 @@ class CostTable:
         return cls.for_levels(schedule.levels)
 
 
+# -------------------------------------------------------------- abft cost --
+
+
+@dataclasses.dataclass(frozen=True)
+class AbftCost:
+    """Extra work the ABFT column checksum (kernels/abft.py) adds to one
+    (M, N, K) matmul blocked at row-block ``bm``: the e^T·A checksum row
+    is *appended to A* and rides the product GEMM (one extra output row
+    per row block — the classical Huang–Abraham construction), every
+    output element is reduced into a column sum, and the tolerance comes
+    from static per-column |B| stats precomputed once at init (so B is
+    never re-read per call).  Counted separately from the base matmul so
+    schedule sweeps can report the surcharge as a ratio."""
+
+    macs: int   # the fused checksum row: one extra GEMM row per row block
+    adds: int   # column sums of C + the e^T reduction of A + compares
+    words: int  # A read by the e^T reduction + checksum rows, top level
+
+    @property
+    def ops(self) -> int:
+        return self.macs + self.adds
+
+
+def abft_matmul_cost(M: int, N: int, K: int, bm: int) -> AbftCost:
+    """Count the fused checksum side-channel.  Everything is
+    O(M·K + K·N + M·N) arithmetic but only O(M·K + N) *traffic* — the
+    O(M·K·N) product is never redone (the Huang–Abraham identity) and B
+    is never re-read (the checksum row shares the product's weight pass;
+    the tolerance scale is static).  On a memory-bound serving step the
+    traffic term is the one that matters."""
+    nrb = -(-M // bm)
+    return AbftCost(
+        # (e^T·A)·B per row block, fused as one extra GEMM output row
+        macs=nrb * K * N,
+        # in-kernel column sums (each output element reduced once), the
+        # e^T column reduction of A, and the final compares
+        adds=M * N + M * K + nrb * N,
+        # A re-read by the e^T reduction, checksum rows written + read;
+        # B rides the product's own pass, so it never re-crosses the top
+        words=M * K + 2 * nrb * N,
+    )
+
+
+def abft_energy_pj(cost: AbftCost, table: CostTable) -> float:
+    """Price the surcharge under a paper Table-3 cost table: arithmetic at
+    MAC cost (an fp32 add/compare is bounded above by a MAC) and traffic
+    at the outermost level's per-access energy — the checksum row
+    streams its extra operands once and never tiles into the hierarchy."""
+    return cost.ops * table.mac_pj + cost.words * table.level_pj[-1]
+
+
 # TPU v5e constants (per chip) — shared with benchmarks/roofline.py.
 TPU_PEAK_FLOPS_BF16 = 197e12
 TPU_HBM_BYTES_PER_S = 819e9

@@ -34,6 +34,67 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _matmul_abft_kernel(a_ref, b_ref, o_ref, c_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        # column checksum of this (bm, bn) output block, pre-cast: one fp32
+        # row per row-block so corruption localizes to a row-block and the
+        # (i, j) output blocks are still each written exactly once.
+        c_ref[...] = jnp.sum(acc_ref[...], axis=0, keepdims=True)
+
+
+def matmul_pallas_abft(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool = False,
+    out_dtype=None,
+) -> tuple[jax.Array, jax.Array]:
+    """ABFT variant of :func:`matmul_pallas`: also emits the per-row-block
+    column checksums e^T·C as an (M/bm, N) fp32 array, summed from the
+    fp32 accumulator (so the check is independent of the output cast)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        (M, N, K), (bm, bn, bk)
+    )
+    n_k = K // bk
+    out_dtype = out_dtype or a.dtype
+    return pl.pallas_call(
+        functools.partial(_matmul_abft_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), out_dtype),
+            jax.ShapeDtypeStruct((M // bm, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
 def matmul_pallas(
     a: jax.Array,
     b: jax.Array,

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mapper import MatmulTiles, choose_matmul_tiles
-from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.abft import ABFT_ATOL, ABFT_RTOL
+from repro.kernels.matmul.matmul import matmul_pallas, matmul_pallas_abft
 
 
 def _should_interpret() -> bool:
@@ -38,3 +39,37 @@ def matmul(
     bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
     out = matmul_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interp)
     return out[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("tiles", "interpret"))
+def matmul_abft(
+    a: jax.Array,
+    b: jax.Array,
+    tiles: MatmulTiles | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """ABFT-checked :func:`matmul`: returns ``(out, bad)`` where ``bad`` is
+    a scalar bool — True iff the kernel's per-row-block column checksums
+    e^T·C disagree with the O(K·N/bm)-cost reference (e^T·A)·B beyond the
+    calibrated fp32 tolerance.  Zero-padded rows/cols are checksum-neutral,
+    so padding needs no special-casing."""
+    M, K = a.shape
+    _, N = b.shape
+    t = tiles or choose_matmul_tiles(M, N, K)
+    interp = _should_interpret() if interpret is None else interpret
+    bm, bn, bk = min(t.bm, M), min(t.bn, N), min(t.bk, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+    out, checks = matmul_pallas_abft(
+        ap, bp, bm=bm, bn=bn, bk=bk, interpret=interp
+    )
+    a32 = ap.astype(jnp.float32)
+    b32 = bp.astype(jnp.float32)
+    nrb = ap.shape[0] // bm
+    ref = a32.reshape(nrb, bm, ap.shape[1]).sum(axis=1) @ b32
+    scale = (
+        jnp.abs(a32).reshape(nrb, bm, ap.shape[1]).sum(axis=1) @ jnp.abs(b32)
+    )
+    bad = jnp.any(jnp.abs(checks - ref) > ABFT_ATOL + ABFT_RTOL * scale)
+    return out[:M, :N], bad

@@ -66,6 +66,21 @@ def main():
     ap.add_argument("--attention", choices=("flash", "xla"), default="flash",
                     help="decode-attention substrate: ragged flash-decoding "
                          "or the masked dense/blockwise oracle")
+    ap.add_argument("--abft", choices=("off", "checksum", "paranoid"),
+                    default="off",
+                    help="silent-data-corruption defense "
+                         "(KernelConfig.abft): 'checksum' arms "
+                         "checksum-carrying matmuls, a sampled attention "
+                         "fingerprint, and a periodic weight scrub — "
+                         "flagged steps are retried and, if the fault "
+                         "persists, the offending request is quarantined; "
+                         "'paranoid' re-verifies every step on the dense "
+                         "oracle")
+    ap.add_argument("--scrub-every", type=int, default=1,
+                    help="abft: steps between full weight-fingerprint "
+                         "scrubs (1 = every step; larger values amortize "
+                         "the scrub read at the cost of up to N-1 steps "
+                         "of weight-flip detection latency)")
     ap.add_argument("--kv-layout", choices=("contiguous", "paged"),
                     default="contiguous",
                     help="KV cache layout (ServeConfig.kv_layout): "
@@ -129,6 +144,9 @@ def main():
     if args.static and (args.snapshot_dir or args.resume):
         ap.error("--snapshot-dir/--resume need the continuous engine "
                  "(drop --static)")
+    if args.abft != "off" and args.kv_layout != "paged":
+        ap.error("--abft localizes corruption through the paged pool's "
+                 "per-block fingerprints (add --kv-layout paged)")
 
     cfg = get(args.arch)
     model = build(cfg)
@@ -145,7 +163,10 @@ def main():
             num_blocks=args.num_blocks,
             prefix_sharing=not args.no_prefix_sharing,
         ),
-        kernel=KernelConfig(matmul=args.matmul, attention=args.attention),
+        kernel=KernelConfig(
+            matmul=args.matmul, attention=args.attention,
+            abft=args.abft, scrub_every=args.scrub_every,
+        ),
         durability=DurabilityConfig(
             snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
         ),
@@ -174,10 +195,10 @@ def main():
         )
         n_reqs = len(eng._reqs)
         rids = sorted(eng._reqs)
-        while eng.step(on_token):
-            pass
-        outs = [eng.pop_result(r) for r in rids]
-        eng.close()
+        with eng:
+            while eng.step(on_token):
+                pass
+            outs = [eng.pop_result(r) for r in rids]
     elif args.static:
         reqs = make_workload(
             cfg, args.requests, args.new_tokens, args.seed,
@@ -191,9 +212,8 @@ def main():
             deadline=args.deadline_steps,
         )
         n_reqs = len(reqs)
-        eng = Engine(cfg, params, scfg)
-        outs = eng.run(reqs, on_token=on_token)
-        eng.close()
+        with Engine(cfg, params, scfg) as eng:
+            outs = eng.run(reqs, on_token=on_token)
     dt = time.perf_counter() - t0
 
     total_new = sum(len(o) for o in outs)

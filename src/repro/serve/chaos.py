@@ -40,9 +40,13 @@ from __future__ import annotations
 import dataclasses
 import os
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import abft
 from repro.serve import kvcache, recovery
+from repro.serve._env import env_int as env_int  # re-export (legacy import site)
 from repro.serve.engine import (
     TERMINAL_STATUSES,
     Engine,
@@ -56,29 +60,15 @@ from repro.serve.engine import (
 SEED_STRIDE = 1000
 
 
-def env_int(name: str, default: int) -> int:
-    """Parse an integer knob from the environment, rejecting garbage with
-    an actionable message instead of a bare int() traceback."""
-    raw = os.environ.get(name)
-    if raw is None or not raw.strip():
-        return default
-    try:
-        return int(raw.strip(), 10)
-    except ValueError:
-        raise ValueError(
-            f"environment variable {name}={raw!r} is not an integer "
-            f"(expected e.g. {name}={default})"
-        ) from None
-
-
 def repro_command(
     seed: int,
     episodes_var: str = "CHAOS_EPISODES",
     target: str = "test-chaos",
+    seed_var: str = "CHAOS_SEED",
 ) -> str:
     """The exact shell command that replays one episode of the seeded
-    matrix (episode seeds are ``CHAOS_SEED + SEED_STRIDE + ep``)."""
-    return f"{episodes_var}=1 CHAOS_SEED={seed - SEED_STRIDE} make {target}"
+    matrix (episode seeds are ``<seed_var> + SEED_STRIDE + ep``)."""
+    return f"{episodes_var}=1 {seed_var}={seed - SEED_STRIDE} make {target}"
 
 
 def episode_header(
@@ -86,12 +76,13 @@ def episode_header(
     seed: int,
     episodes_var: str = "CHAOS_EPISODES",
     target: str = "test-chaos",
+    seed_var: str = "CHAOS_SEED",
 ) -> str:
     """Print (and return) the episode banner: seed, the generator's initial
     internal state (proof the episode is a pure function of the seed), and
     the one-line repro command a CI failure should be rerun with."""
     state = np.random.default_rng(seed).bit_generator.state["state"]["state"]
-    cmd = repro_command(seed, episodes_var, target)
+    cmd = repro_command(seed, episodes_var, target, seed_var)
     print(
         f"[chaos] {kind} episode seed={seed} "
         f"pcg64_state={state:#x} repro: {cmd}",
@@ -560,4 +551,318 @@ def run_crash_episode(
         quarantined=len(report.quarantined),
         popped_pre_crash=len(popped),
         corrupted=corrupted,
+    )
+
+
+# ------------------------------------------------------------ SDC episodes --
+# Seeded bit-flip (silent-data-corruption) injection against the ABFT
+# pipeline (kernels/abft.py + Engine._sdc_recover).  Three fault surfaces:
+#
+#   * transient compute flips (matmul / attention outputs) ride the fault
+#     operand *inside* the jitted decode program — armed via
+#     ``Engine.arm_fault`` — and must be detected by the step's checksums
+#     and healed by the oracle-substrate retry (survivors AND the victim
+#     stay bitwise equal to the unfaulted oracle);
+#   * persistent KV flips land host-side in the paged pool between steps
+#     (``flip_kv_bit``) and must be caught by the per-block fingerprint
+#     audit at the top of the next step, quarantining exactly the owning
+#     request and leaking zero blocks;
+#   * persistent weight flips (``flip_weight_bit``) are unlocalizable by
+#     construction — both sides of e^T·(A·B) = (e^T·A)·B use the corrupt
+#     operand — so the weight-fingerprint detector must raise
+#     ``SDCUnlocalizedError`` BEFORE any poisoned token is emitted, and
+#     the caller restores from the newest snapshot with pristine params.
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One scheduled injection: what to corrupt and (for compute faults)
+    where the fault operand should aim.  ``kind`` is "matmul",
+    "attention", or "kv"; compute-fault targeting (call_idx / layer / row
+    / bit) is drawn by :func:`run_sdc_episode` once the engine's trace
+    probe knows the step's check-site counts."""
+
+    kind: str
+    call_idx: int = 0
+    layer: int = abft.FAULT_OUTER
+    row: int = 0
+    bit: int = 27
+    fired: bool = False
+
+
+def flip_kv_bit(
+    eng: Engine, rng: np.random.Generator
+) -> tuple[int, int] | None:
+    """Flip the exponent MSB of one seeded element inside an owned,
+    uniquely-referenced KV-pool block that was NOT legally written this
+    step — exactly the corruption the per-block fingerprint audit owes a
+    detection for at the top of the next step.  The exponent MSB
+    guarantees an abs-sum delta of at least ~2.0 (0 -> 2.0; |v| < 2
+    explodes by 2^128; |v| >= 2 collapses toward 0), so the fp32 block
+    sum always changes representably.  Unique referencing (refcount 1,
+    no CoW pending) pins the blast radius to one request: the audit
+    quarantines the owner and every survivor must stay bitwise clean.
+
+    Returns ``(victim_rid, block)`` or None when no block is eligible
+    (e.g. every owned block was written this step)."""
+    refs = eng.live_block_refs()
+    cands = []
+    for slot, row in sorted(eng._rows.items()):
+        if slot not in eng._slots:
+            continue  # lane/ghost rows: quarantine targets decode slots
+        for b in row.blocks:
+            if (
+                refs.get(b, 0) == 1
+                and b not in eng._touched
+                and b != row.cow_dst
+            ):
+                cands.append((slot, b))
+    if not cands:
+        return None
+    slot, block = cands[int(rng.integers(len(cands)))]
+    kp = np.array(eng.caches["kpool"])
+    flat = kp.reshape(kp.shape[0], kp.shape[1], -1)
+    li = int(rng.integers(flat.shape[0]))
+    ei = int(rng.integers(flat.shape[2]))
+    cell = flat[li, block, ei : ei + 1]
+    if cell.itemsize == 2:  # bf16: sign 15, exponent 14..7
+        cell.view(np.uint16)[:] ^= np.uint16(1 << 14)
+    else:  # f32: sign 31, exponent 30..23
+        cell.view(np.uint32)[:] ^= np.uint32(1 << 30)
+    eng.caches["kpool"] = jnp.asarray(kp)
+    return eng._slots[slot].rid, block
+
+
+def flip_weight_bit(params, rng: np.random.Generator) -> tuple[object, int]:
+    """Return ``(corrupted_params, leaf_ordinal)``: a copy of the param
+    pytree with the exponent MSB of one seeded element flipped in one
+    seeded leaf.  Models persistent weight rot (a stuck DRAM cell under
+    the model weights): the ABFT checksums cannot see it, so the engine's
+    per-leaf weight fingerprint must — by raising
+    :class:`~repro.serve.engine.SDCUnlocalizedError` on the next step."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    li = int(rng.integers(len(leaves)))
+    leaf = np.array(leaves[li])
+    flat = leaf.reshape(-1)
+    cell = flat[int(rng.integers(flat.shape[0])) : ][:1]
+    if cell.itemsize == 2:
+        cell.view(np.uint16)[:] ^= np.uint16(1 << 14)
+    else:
+        cell.view(np.uint32)[:] ^= np.uint32(1 << 30)
+    leaves = list(leaves)
+    leaves[li] = jnp.asarray(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves), li
+
+
+@dataclasses.dataclass
+class SDCEpisodeReport:
+    """One SDC episode's ledger, aggregated by the test matrix to prove
+    every fault surface actually fired AND was caught."""
+
+    seed: int
+    steps: int
+    injected: dict[str, int]      # faults that actually fired, by kind
+    detected: int                 # checksum/fingerprint detections (compute)
+    retried: int                  # oracle-substrate re-executions
+    quarantined: int              # KV-flip quarantines
+    statuses: dict[str, int]
+
+
+def make_sdc_workload(
+    rng: np.random.Generator, vocab: int, max_len: int, n_requests: int = 8
+) -> list[Request]:
+    """Plain seeded prompts (no deadlines/priorities — scheduling chaos is
+    run_episode's job; here every divergence from the oracle must be the
+    injector's doing)."""
+    return [
+        Request(
+            rng.integers(0, vocab, int(rng.integers(4, max_len // 2))).astype(
+                np.int32
+            ),
+            max_new_tokens=int(rng.integers(4, 12)),
+            request_id=i,
+        )
+        for i in range(n_requests)
+    ]
+
+
+def run_sdc_episode(
+    eng: Engine,
+    oracle: dict[int, list[int]],
+    reqs: list[Request],
+    seed: int,
+    n_compute: int | None = None,
+    n_kv: int | None = None,
+    max_steps: int = 400,
+) -> SDCEpisodeReport:
+    """One seeded SDC episode through a reused (drained) abft engine:
+    drive the workload, firing ``n_compute`` transient compute flips (via
+    the in-program fault operand) and ``n_kv`` persistent KV-pool flips
+    (host-side) at seeded steps; ``None`` draws counts from the episode
+    seed.  Asserts the full detect -> localize -> retry -> quarantine
+    contract:
+
+      * every fired compute fault is detected and retried exactly once
+        (``n_compute <= SDC_RETRY_BUDGET`` here, so no budget quarantine
+        muddies the ledger — the budget path has its own test);
+      * every fired KV flip quarantines exactly its owning request, with
+        an ``"sdc"``-prefixed FAILED reason;
+      * a clean episode (0 faults) detects and quarantines NOTHING —
+        zero false positives;
+      * the pool drains leak-free and every FINISHED request agrees
+        bitwise with the unfaulted oracle (quarantined ones are bitwise
+        prefixes).
+    """
+    from repro.serve.engine import SDC_RETRY_BUDGET
+
+    assert eng._abft, "run_sdc_episode needs KernelConfig.abft != 'off'"
+    assert (
+        not eng._reqs and not eng._slots and not eng._waiting
+        and eng._lane is None
+    ), "sdc episode needs a drained engine"
+    cmd = episode_header("sdc", seed, "SDC_EPISODES", "test-sdc", "SDC_SEED")
+    rng = np.random.default_rng(seed)
+    stats0 = dict(eng.stats)
+    if n_compute is None:
+        n_compute = int(rng.integers(0, SDC_RETRY_BUDGET + 1))
+    if n_kv is None:
+        n_kv = int(rng.integers(0, 3))
+    assert n_compute <= SDC_RETRY_BUDGET, (
+        "per-episode compute faults beyond the retry budget would "
+        "quarantine every live slot; test that path explicitly instead"
+    )
+    plans = [FaultPlan("matmul" if rng.random() < 0.5 else "attention")
+             for _ in range(n_compute)]
+    plans += [FaultPlan("kv") for _ in range(n_kv)]
+    plans = [plans[i] for i in rng.permutation(len(plans))]
+    pending = list(rng.permutation(len(reqs)))
+    kv_victims: list[int] = []
+    steps = 0
+    next_fire = 1 + int(rng.integers(0, 3))
+
+    def arm_compute(plan: FaultPlan) -> bool:
+        # trace-time site counts (populated by the first abft step); the
+        # lone out-of-scan matmul is the unembed GEMM at index mms-1
+        mms = eng._abft_probe.get("mms", 0)
+        attns = eng._abft_probe.get("attns", 0)
+        live = sorted(eng._slots)
+        if plan.kind == "attention":
+            sampled = set(abft.sample_rows(eng.scfg.batch, eng._abft))
+            live = [s for s in live if s in sampled]
+            if not live or not attns:
+                return False
+            plan.call_idx = int(rng.integers(attns))
+            plan.layer = int(rng.integers(eng.cfg.n_layers))
+            site = abft.FAULT_ATTENTION
+        else:
+            if not live or not mms:
+                return False
+            if mms == 1 or rng.random() < 0.25:
+                plan.call_idx, plan.layer = mms - 1, abft.FAULT_OUTER
+            else:
+                plan.call_idx = int(rng.integers(mms - 1))
+                plan.layer = int(rng.integers(eng.cfg.n_layers))
+            site = abft.FAULT_MATMUL
+        plan.row = live[int(rng.integers(len(live)))]
+        # exponent flips on the row's largest element (col = -1): the one
+        # corruption class a bf16 checksum provably owes a detection for
+        plan.bit = int(rng.integers(24, 30))
+        eng.arm_fault(site, plan.call_idx, plan.row, -1, plan.bit, plan.layer)
+        return True
+
+    while pending or eng._slots or eng._waiting or eng._lane is not None:
+        for _ in range(int(rng.integers(1, 4))):
+            if pending:
+                eng.submit(reqs[pending.pop(0)])
+        if plans and steps >= next_fire and eng._slots:
+            plan = plans[0]
+            if plan.kind == "kv":
+                hit = flip_kv_bit(eng, rng)
+                if hit is not None:
+                    kv_victims.append(hit[0])
+                    plan.fired = True
+            else:
+                plan.fired = arm_compute(plan)
+            if plan.fired:
+                plans.pop(0)
+                # gap >= 2: the previous fault's quarantine (if any) must
+                # settle before the next fault picks a victim row
+                next_fire = steps + 2 + int(rng.integers(0, 3))
+            # ineligible this step (no live slots in the sampled-row set,
+            # no flippable block): retry at the next step boundary
+        eng.step()
+        steps += 1
+        audit(eng)
+        assert steps < max_steps, (
+            f"sdc episode seed={seed} failed to drain in {steps} steps; "
+            f"repro: {cmd}"
+        )
+    audit(eng)
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1, (
+        f"sdc episode seed={seed} leaked "
+        f"{eng.pool.num_blocks - 1 - eng.pool.free_blocks} blocks after "
+        f"quarantine; repro: {cmd}"
+    )
+
+    for p in plans:  # anything left never found an eligible target
+        assert not p.fired
+    fired_compute = n_compute - sum(
+        1 for p in plans if p.kind in ("matmul", "attention")
+    )
+    fired_kv = len(kv_victims)
+    delta = {k: v - stats0.get(k, 0) for k, v in eng.stats.items()}
+    assert delta["sdc_detected"] == fired_compute, (
+        f"sdc episode seed={seed}: {fired_compute} compute faults fired "
+        f"but {delta['sdc_detected']} were detected; repro: {cmd}"
+    )
+    assert delta["sdc_retried"] == fired_compute, (
+        f"sdc episode seed={seed}: detection without the one-for-one "
+        f"retry ({delta['sdc_retried']} != {fired_compute}); repro: {cmd}"
+    )
+    assert delta["quarantined"] == fired_kv, (
+        f"sdc episode seed={seed}: {fired_kv} KV flips fired but "
+        f"{delta['quarantined']} requests were quarantined; repro: {cmd}"
+    )
+
+    statuses: dict[str, int] = {}
+    for r in reqs:
+        res = eng.pop_result(r.request_id)
+        statuses[res.status.value] = statuses.get(res.status.value, 0) + 1
+        want = oracle[r.request_id]
+        got = res.tolist()
+        if res.status == RequestStatus.FINISHED:
+            assert got == want, (
+                f"sdc episode seed={seed} rid {r.request_id}: FINISHED "
+                f"output {got} != oracle {want} (a fault survived "
+                f"detection or the retry diverged); repro: {cmd}"
+            )
+        else:
+            assert res.status == RequestStatus.FAILED, (
+                f"sdc episode seed={seed} rid {r.request_id}: unexpected "
+                f"terminal status {res.status}; repro: {cmd}"
+            )
+            assert r.request_id in kv_victims, (
+                f"sdc episode seed={seed} rid {r.request_id}: FAILED but "
+                f"never targeted by a KV flip ({res.reason!r}); "
+                f"repro: {cmd}"
+            )
+            assert res.reason.startswith("sdc"), (
+                f"sdc episode seed={seed} rid {r.request_id}: quarantine "
+                f"reason {res.reason!r} not sdc-attributed; repro: {cmd}"
+            )
+            assert got == want[: len(got)], (
+                f"sdc episode seed={seed} rid {r.request_id}: quarantined "
+                f"prefix {got} diverged from oracle {want}; repro: {cmd}"
+            )
+    return SDCEpisodeReport(
+        seed=seed,
+        steps=steps,
+        injected={
+            "compute": fired_compute,
+            "kv": fired_kv,
+        },
+        detected=delta["sdc_detected"],
+        retried=delta["sdc_retried"],
+        quarantined=delta["quarantined"],
+        statuses=statuses,
     )

@@ -381,6 +381,22 @@ class KernelConfig:
     # the ragged flash-decoding path (per-slot live lengths, KV reads
     # scale with live length); "xla" is the masked dense/blockwise oracle.
     attention: str = "flash"
+    # "off" | "checksum" | "paranoid": ABFT verification of the decode
+    # step (kernels/abft.py).  "checksum" column-checksums every
+    # projection GEMM and fingerprints 4 sampled rows of each paged
+    # decode-attention output; "paranoid" fingerprints every row.  Arms
+    # the engine's detect->localize->retry->quarantine pipeline
+    # (paged layout only).  Served tokens are bitwise identical to "off".
+    abft: str = "off"
+    # decode steps between full weight-fingerprint passes (abft modes
+    # only).  Checksums cannot see weight corruption — both sides of the
+    # Huang–Abraham identity use the corrupted operand — so weights get a
+    # periodic scrub instead: it re-reads every parameter, which at 1
+    # (every step, the default and the strictest setting) can dominate a
+    # memory-bound decode step.  At N > 1 a weight flip is caught at the
+    # next scrub, i.e. up to N-1 steps after it lands; compute/KV faults
+    # are still detected on the very step they strike.
+    scrub_every: int = 1
 
     def __post_init__(self):
         if self.matmul not in ("xla", "pallas"):
@@ -388,6 +404,14 @@ class KernelConfig:
         if self.attention not in ("flash", "xla"):
             raise ValueError(
                 f"attention must be 'flash' or 'xla': {self.attention!r}"
+            )
+        if self.abft not in ("off", "checksum", "paranoid"):
+            raise ValueError(
+                f"abft must be 'off', 'checksum' or 'paranoid': {self.abft!r}"
+            )
+        if not isinstance(self.scrub_every, int) or self.scrub_every < 1:
+            raise ValueError(
+                f"scrub_every must be a positive int: {self.scrub_every!r}"
             )
 
 
@@ -461,6 +485,8 @@ _LEGACY_FLAT = {
     "decode_block": ("kv", "decode_block"),
     "matmul": ("kernel", "matmul"),
     "attention": ("kernel", "attention"),
+    "abft": ("kernel", "abft"),
+    "scrub_every": ("kernel", "scrub_every"),
     "snapshot_dir": ("durability", "snapshot_dir"),
     "snapshot_every": ("durability", "snapshot_every"),
     "snapshot_keep": ("durability", "snapshot_keep"),
@@ -552,6 +578,12 @@ class ServeConfig:
                 "kv_checksum tracks per-physical-block sums, which only "
                 "exist under kv_layout='paged'"
             )
+        if self.abft != "off" and self.kv_layout != "paged":
+            raise ValueError(
+                "abft localizes corruption through the paged pool's "
+                "per-block fingerprints and the paged attention twin; "
+                "set kv_layout='paged' (or abft='off')"
+            )
         if self.kv_layout == "paged" and self.max_len % self.block_size:
             raise ValueError(
                 f"max_len {self.max_len} must be a multiple of "
@@ -622,6 +654,10 @@ class ServeConfig:
         return self.kernel.attention
 
     @property
+    def abft(self) -> str:
+        return self.kernel.abft
+
+    @property
     def snapshot_dir(self) -> str | None:
         return self.durability.snapshot_dir
 
@@ -688,6 +724,9 @@ class _SlotState:
     # emitted < replay the decode loop teacher-forces the recorded tokens
     # (asserting bitwise re-derivation) without re-emitting them.
     replay: int = 0
+    # abft: checksum-failed steps survived while this request was live
+    # (quarantined once it exceeds SDC_RETRY_BUDGET)
+    sdc_retries: int = 0
 
 
 @dataclasses.dataclass
@@ -722,6 +761,37 @@ def _pallas_mm(x: jax.Array, w: jax.Array) -> jax.Array:
     return out.reshape(x.shape[:-1] + (w.shape[-1],))
 
 
+def _pallas_mm_abft(x: jax.Array, w: jax.Array) -> jax.Array:
+    """ABFT-checked Pallas matmul: the kernel emits per-row-block column
+    checksums verified in-program; the verdict joins the active
+    AbftTrace's flags (the trace-level e^T check still runs on top, so
+    the injected-fault path is covered on both substrates)."""
+    from repro.arch import layers as L
+    from repro.kernels.matmul.ops import matmul_abft
+
+    out, bad = matmul_abft(x.reshape(-1, x.shape[-1]), w)
+    trace = L._ABFT[0]
+    if trace is not None:
+        trace.flags.append(bad)
+    return out.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+# checksum-failed steps one request survives (each costs a rewind +
+# oracle-substrate re-execution) before it is quarantined as the probable
+# corruption source
+SDC_RETRY_BUDGET = 2
+
+
+class SDCUnlocalizedError(RuntimeError):
+    """A detected silent-data-corruption could not be pinned to one
+    request (the oracle-substrate retry still failed its checksums, or
+    the weight fingerprint itself changed).  Raised BEFORE the step's
+    tokens are emitted or journaled, so the newest snapshot + journal
+    replay a state with no corrupt token in it: restore via
+    ``recovery.restore_engine`` (with freshly loaded params) instead of
+    serving wrong tokens."""
+
+
 class Engine:
     """Continuous-batching engine over the model zoo's prefill/decode."""
 
@@ -735,7 +805,11 @@ class Engine:
         self.model = build(cfg)
         self.params = params
         self.scfg = scfg
-        self._impl = _pallas_mm if scfg.matmul == "pallas" else None
+        self._abft = scfg.abft if scfg.abft != "off" else None
+        if scfg.matmul == "pallas":
+            self._impl = _pallas_mm_abft if self._abft else _pallas_mm
+        else:
+            self._impl = None
         self._attn = "flash" if scfg.attention == "flash" else None
         self._paged = scfg.kv_layout == "paged"
 
@@ -784,6 +858,8 @@ class Engine:
             "quarantined": 0,   # corruption guard: rows FAILED mid-decode
             "fallbacks": 0,     # substrate fallbacks taken (0 or 1)
             "snapshots": 0,     # recovery snapshots staged
+            "sdc_detected": 0,  # abft: steps whose checksums flagged
+            "sdc_retried": 0,   # abft: oracle-substrate step re-executions
         }
 
         model, impl, axes = self.model, self._impl, self._axes
@@ -835,6 +911,27 @@ class Engine:
         # to the jit output, so the consumed input is never read again.
         # The paged helpers follow the same contract: pack/set/CoW are
         # donated scatters into the pool, never pool copies.
+        # ---- abft state (kernels/abft.py) ----
+        # fault operand: one-shot transient-SDC injection point threaded
+        # through the jitted decode program (zeros = disarmed; the armed
+        # and disarmed programs are the same executable)
+        self._fault = np.zeros((8,), np.int32)
+        self._abft_probe: dict[str, int] = {}  # trace-time check counts
+        self._retry_fn = None       # oracle-substrate re-execution (lazy)
+        self._rewind = None         # len-rewind program (lazy)
+        self._wsums0 = None
+        self._colstats = None
+        if self._abft:
+            from repro.kernels.abft import weight_colstats, weight_sums
+
+            # per-leaf weight fingerprints, baselined ONCE here: ABFT
+            # checksums can't see weight flips (both sides of the identity
+            # use the corrupted operand), so decode re-reduces and compares
+            # exactly — same jitted program on every scrub, bitwise stable
+            self._wsums0 = jax.jit(weight_sums)(params)
+            # static per-column |w| bounds for the checksum tolerance, so
+            # the per-step check never re-reads the (immutable) weights
+            self._colstats = jax.jit(weight_colstats)(params)
         self._decode = self._make_decode(self._attn)
         self._fallback_done = False
         self._admit_group = jax.jit(admit_fn, donate_argnums=(2,))
@@ -905,7 +1002,9 @@ class Engine:
         self._kv_sums: np.ndarray | None = None
         self._pool_sums = None
         self._touched: set[int] = set()
-        if scfg.kv_checksum:
+        # abft localizes inter-step KV flips through the same per-block
+        # fingerprints, so it arms them even without kv_checksum
+        if scfg.kv_checksum or (self._abft and self._paged):
 
             def pool_sums_fn(caches):
                 k = jnp.sum(
@@ -962,6 +1061,46 @@ class Engine:
         """
         model, impl, dblk = self.model, self._impl, self.scfg.decode_block
         sample_one = self._sampler()
+
+        if self._abft:
+            from repro.kernels.abft import AbftTrace, weight_sums
+
+            from repro.kernels.abft import FAULT_SCRUB
+
+            mode, wsums0, probe = self._abft, self._wsums0, self._abft_probe
+            colstats = self._colstats
+
+            def decode_abft_fn(params, toks, caches, keys, ts, fault):
+                trace = AbftTrace(mode, fault, colstats)
+                with (
+                    L.matmul_override(impl),
+                    L.attention_override(attn),
+                    L.decode_block_override(dblk),
+                    L.abft_override(trace),
+                ):
+                    logits, caches = model.decode_step(params, toks, caches)
+                probe["mms"] = trace.mm_calls
+                probe["attns"] = trace.attn_calls
+                nxt = jax.vmap(
+                    lambda lg, k, t: sample_one(lg, jax.random.fold_in(k, t))
+                )(logits, keys, ts)
+                bad = ~jnp.all(
+                    jnp.isfinite(logits.astype(jnp.float32)), axis=-1
+                )
+                # full weight pass only on scrub steps (fault[FAULT_SCRUB],
+                # set by the host on the scrub_every cadence) — it is the
+                # one ABFT cost that scales with total params, not batch
+                w_bad = jax.lax.cond(
+                    fault[FAULT_SCRUB] != 0,
+                    lambda: jnp.any(weight_sums(params) != wsums0),
+                    lambda: jnp.zeros((), jnp.bool_),
+                )
+                flags = trace.any_bad().astype(jnp.int32) | (
+                    w_bad.astype(jnp.int32) << 1
+                )
+                return (nxt, bad, flags), caches
+
+            return jax.jit(decode_abft_fn, donate_argnums=(2,))
 
         def decode_fn(params, toks, caches, keys, ts):
             with (
@@ -1691,6 +1830,7 @@ class Engine:
         changed = (sums != prev) & ~(np.isnan(sums) & np.isnan(prev))
         if self._touched:
             changed[list(self._touched)] = False
+        prefix = "sdc: " if self._abft else ""
         for b in np.nonzero(changed)[0]:
             b = int(b)
             owners = [
@@ -1702,10 +1842,89 @@ class Engine:
                 if s in self._slots:
                     self._quarantine(
                         s,
-                        f"KV corruption: block {b} checksum changed "
-                        f"without a write",
+                        f"{prefix}KV corruption: block {b} checksum "
+                        f"changed without a write",
                     )
         self._kv_sums = sums
+
+    def arm_fault(
+        self,
+        site: int,
+        call_idx: int,
+        row: int,
+        col: int,
+        bit: int,
+        layer: int = -1,
+    ) -> None:
+        """Arm the one-shot SDC injection operand for the next decode step
+        (seeded chaos harness; see kernels/abft.py for the site codes, the
+        ``col == -1`` largest-magnitude targeting, and the ``layer``
+        semantics — ``-1`` targets checks outside the layer scan, e.g. the
+        unembed GEMM).  The operand is cleared after the faulty pass, so
+        the detect->retry re-execution models a *transient* flip and runs
+        clean."""
+        if not self._abft:
+            raise ValueError(
+                "arm_fault needs the abft pipeline: set "
+                "KernelConfig.abft='checksum' (or 'paranoid')"
+            )
+        self._fault = np.array(
+            [site, call_idx, row, col, bit, layer, 0, 0], np.int32
+        )
+
+    def _sdc_recover(self, flags: int, toks, keys, ts):
+        """Detect -> localize -> retry.  Roll the donated caches back one
+        position and re-execute the step on the oracle substrate with the
+        fault operand disarmed: KV writes are positionally idempotent (the
+        write position depends on lengths and tables, never on values), so
+        the retry overwrites whatever KV the faulty pass poisoned.  A
+        retry that still fails its checksums — or any weight-fingerprint
+        mismatch — is unlocalizable: raise BEFORE emission, so the journal
+        never records a poisoned token and the newest snapshot restores a
+        corruption-free state."""
+        self.stats["sdc_detected"] += 1
+        if flags & 2:
+            raise SDCUnlocalizedError(
+                "weight fingerprint mismatch: parameter corruption cannot "
+                "be retried away; restore from the newest snapshot with "
+                "freshly loaded params"
+            )
+        # a step-level checksum cannot name the victim row, so every live
+        # request is charged one retry; repeat offenders are quarantined
+        # as the probable corruption source before the re-execution
+        for s in sorted(self._slots):
+            if self._slots[s].sdc_retries >= SDC_RETRY_BUDGET:
+                self._quarantine(s, "sdc: retry budget exhausted")
+            else:
+                self._slots[s].sdc_retries += 1
+        if self._rewind is None:
+            self._rewind = jax.jit(
+                lambda c: {**c, "len": c["len"] - 1}, donate_argnums=(0,)
+            )
+        if self._retry_fn is None:
+            self._retry_fn = (
+                self._decode if self._attn is None else self._make_decode(None)
+            )
+        self.caches = self._rewind(self.caches)
+        self.stats["sdc_retried"] += 1
+        # disarmed fault, but with the scrub flag set: the retry is the
+        # one step that must rule out weight corruption regardless of the
+        # scrub cadence before its checksum verdict is trusted
+        from repro.kernels.abft import FAULT_SCRUB
+
+        retry_fault = np.zeros((8,), np.int32)
+        retry_fault[FAULT_SCRUB] = 1
+        (nxt, bad, flags2), self.caches = self._retry_fn(
+            self.params, toks, self.caches, keys, ts,
+            jnp.asarray(retry_fault),
+        )
+        if int(flags2):
+            raise SDCUnlocalizedError(
+                "checksum failure persisted across the oracle-substrate "
+                "retry: corruption is unlocalizable; restore from the "
+                "newest snapshot"
+            )
+        return nxt, bad
 
     # -------------------------------------------------------------- drive --
     def step(self, on_token: TokenCallback | None = None) -> bool:
@@ -1722,6 +1941,13 @@ class Engine:
         return alive
 
     def _step_core(self, on_token: TokenCallback | None) -> bool:
+        if self._abft and self._kv_sums is not None:
+            # audit BEFORE decode, against the blocks the PREVIOUS step
+            # legally wrote: an inter-step KV flip quarantines its owner
+            # before the poisoned attention read, so the victim's partial
+            # output stays a clean oracle prefix and survivors never see
+            # the corrupt block
+            self._audit_kv_checksums()
         self._step_no += 1
         self._touched = {kvcache.SINK_BLOCK}
         self._expire_deadlines()
@@ -1780,13 +2006,24 @@ class Engine:
             for s, st in self._slots.items():
                 row = self._rows[s]
                 self._touched.add(row.blocks[(row.plen + st.emitted - 1) // bs])
-        (nxt, bad), self.caches = self._decode_call(
-            self.params,
-            jnp.asarray(self._cur_tok[:, None]),
-            self.caches,
-            jnp.asarray(keys),
-            jnp.asarray(ts),
-        )
+        toks = jnp.asarray(self._cur_tok[:, None])
+        jkeys, jts = jnp.asarray(keys), jnp.asarray(ts)
+        if self._abft:
+            fault = self._fault.copy()
+            from repro.kernels.abft import FAULT_SCRUB
+
+            fault[FAULT_SCRUB] = self._step_no % self.scfg.kernel.scrub_every == 0
+            (nxt, bad, flags), self.caches = self._decode_call(
+                self.params, toks, self.caches, jkeys, jts,
+                jnp.asarray(fault),
+            )
+            self._fault = np.zeros((8,), np.int32)  # transient: one shot
+            if int(flags):
+                nxt, bad = self._sdc_recover(int(flags), toks, jkeys, jts)
+        else:
+            (nxt, bad), self.caches = self._decode_call(
+                self.params, toks, self.caches, jkeys, jts
+            )
         nxt = np.asarray(nxt)
         bad = np.asarray(bad)
         self._cur_tok = nxt.copy()
@@ -1833,7 +2070,7 @@ class Engine:
                 continue  # the done-callback already cancelled it
             self._release_slot(s)  # backfilled at the next step
             self._finish(self._reqs[rid], RequestStatus.FINISHED, "")
-        if self._kv_sums is not None:
+        if self._kv_sums is not None and not self._abft:
             self._audit_kv_checksums()
         return True
 
@@ -1881,12 +2118,19 @@ class Engine:
         return self.run(requests)
 
     def close(self) -> None:
-        """Flush and close the recovery journal (no-op without durability).
-        Simulated crashes skip this on purpose — every journal record is
-        already fsync'd at the step boundary that produced it."""
+        """Flush and close the recovery journal (no-op without durability,
+        idempotent).  Simulated crashes skip this on purpose — every
+        journal record is already fsync'd at the step boundary that
+        produced it."""
         if self.recovery is not None:
             self.recovery.close()
             self.recovery = None
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class StaticEngine:

@@ -4,7 +4,7 @@ import os
 
 import pytest
 
-from repro.serve.chaos import env_int
+from repro.serve._env import env_int
 
 
 @pytest.fixture(autouse=True, scope="session")
@@ -45,6 +45,19 @@ def recovery_episodes(default: int) -> int:
     smaller defaults than chaos (each episode compiles a fresh engine
     pair), cranked by ``make test-recovery`` (RECOVERY_EPISODES)."""
     return _env_int("RECOVERY_EPISODES", default)
+
+
+def sdc_episodes(default: int) -> int:
+    """Episode count for the ``sdc``-marked bit-flip injection suites:
+    small ``default`` inside the full run, cranked by ``make test-sdc``
+    (SDC_EPISODES)."""
+    return _env_int("SDC_EPISODES", default)
+
+
+def sdc_seed() -> int:
+    """Base seed for the SDC bit-flip episode matrix (CI shards it the
+    same way the chaos jobs shard CHAOS_SEED)."""
+    return _env_int("SDC_SEED", 0)
 
 
 def chaos_seed() -> int:
