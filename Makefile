@@ -19,7 +19,7 @@ RECOVERY_EPISODES ?= 6
 SDC_EPISODES ?= 4
 
 .PHONY: test test-fast test-fuzz test-chaos test-recovery test-scheduler \
-        test-sdc lint validate \
+        test-sdc test-autotune lint validate \
         bench bench-mapper bench-simulate bench-dse bench-serve bench-check
 
 # tier-1 verify: the full suite (matches ROADMAP.md)
@@ -64,6 +64,14 @@ test-recovery:
 # stay bitwise identical to the no-fault oracle
 test-sdc:
 	SDC_EPISODES=$(SDC_EPISODES) $(PY) -m pytest -q -m sdc
+
+# DSE serve-planner units + the tuning-path cache fixes by name: the
+# serveplan sweep/cache/calibration suite, the tile-cache validation
+# fallback, and the SweepCache / iso-throughput regressions (the same
+# tests also run inside test/test-fast)
+test-autotune:
+	$(PY) -m pytest -q tests/test_autotune.py tests/test_dse.py \
+		-k "not slow"
 
 lint:
 	ruff check .

@@ -13,7 +13,11 @@ leaked blocks), and the PR-8 unified-scheduler admission storm
 (chunked prefill cuts interactive TTFT p95 >= 2x vs monolithic
 admission while decoder ITL p95 stays within 1.15x of storm-free,
 bitwise identical to the monolithic oracle with zero leaked blocks
-and at least one mid-prefill lane preemption) on reduced budgets and
+and at least one mid-prefill lane preemption), and the PR-10 DSE
+serve planner (cost-model top-1 config inside the measured top-3 of
+the autotune grid, autotuned >= 1.0x the shipped default, plus fresh
+plan determinism / cache round-trip / corrupt-entry re-search) on
+reduced budgets and
 compares against the committed BENCH_mapper.json /
 BENCH_simulate.json / BENCH_serve.json claims:
 
@@ -266,6 +270,29 @@ def main() -> None:
             f"(compute {sdc_det['detection_rate']:.2f}, "
             f"kv {sdc_det['kv_detection_rate']:.2f})"
         )
+    # PR 10: the DSE serve planner must keep its closed-loop claims — the
+    # analytic model's top-1 config lands in the measured top-3 of a grid
+    # of >= 8 real configs, and the full-space planner winner beats (or
+    # ties) the shipped default's measured tokens/s.  Both are timing
+    # claims from the machine that generated the JSON, gated here; the
+    # fresh pass below re-checks the planner's exact invariants cheaply.
+    if serve_f("autotune.grid_size") < 8:
+        sys.exit(
+            "committed BENCH_serve.json: autotune rank grid shrank below "
+            f"8 configs ({serve_f('autotune.grid_size')})"
+        )
+    if not serve_f("autotune.rank_agreement_top1_in_top3"):
+        sys.exit(
+            "committed BENCH_serve.json: the cost model's top-1 serve "
+            "config fell outside the measured top-3 — the planner's "
+            "ranking no longer tracks the engine"
+        )
+    if serve_f("autotune.autotuned_vs_default_tokens_per_s") < 1.0:
+        sys.exit(
+            "committed BENCH_serve.json: autotuned config only "
+            f"{serve_f('autotune.autotuned_vs_default_tokens_per_s'):.2f}x "
+            "the shipped default (floor 1.0x)"
+        )
 
     failures = []
 
@@ -303,6 +330,10 @@ def main() -> None:
         # the reduced-budget fresh_sdc pass below gates the SDC
         # invariants; the full phase re-runs the mid-size overhead A/B
         sdc=False,
+        # the autotune rank grid measures ~12 engine configs; its timing
+        # gates are committed-JSON claims, and the planner's exact
+        # invariants are re-checked cheaply below without engine builds
+        autotune=False,
     )
     if not fresh_serve["solo_outputs_identical"]:
         failures.append("serve solo-bitwise")
@@ -461,6 +492,40 @@ def main() -> None:
     )
     if not sdc_ok:
         failures.append("sdc/abft invariants")
+
+    # PR 10: fresh planner invariants, no engine builds (the measured rank
+    # and A/B gates are timing claims checked against the committed JSON
+    # above): planning must be deterministic, the winner must survive a
+    # cache round-trip, and a corrupted cache entry must be re-searched
+    # rather than served.
+    from repro.core import serveplan
+
+    with tempfile.TemporaryDirectory() as tmp:
+        plan_path = os.path.join(tmp, "plans.json")
+        p1 = serveplan.plan_serve(cfg, max_len=64, cache=plan_path)
+        p2 = serveplan.plan_serve(cfg, max_len=64, cache=plan_path)
+        with open(plan_path) as f:
+            store = json.load(f)
+        (plan_key,) = store.keys()
+        store[plan_key]["knobs"]["block_size"] = -1
+        with open(plan_path, "w") as f:
+            json.dump(store, f)
+        p3 = serveplan.plan_serve(cfg, max_len=64, cache=plan_path)
+    plan_ok = (
+        p1.source == "search"
+        and p2.source == "cache"
+        and p3.source == "search"
+        and p1.knobs == p2.knobs == p3.knobs
+    )
+    print(
+        f"[{'ok  ' if plan_ok else 'FAIL'}] serve planner: "
+        f"deterministic={p1.knobs == p3.knobs} "
+        f"cache_hit={p2.source == 'cache'} "
+        f"corrupt_entry_replanned={p3.source == 'search'} "
+        f"winner={p1.knobs.kv_layout}/slots={p1.knobs.slots}"
+    )
+    if not plan_ok:
+        failures.append("serve planner invariants")
 
     if args.full:
         fresh_sweep = perf_compare.bench_network_sweep()

@@ -1363,6 +1363,203 @@ def bench_substrate_scaling(
     return res
 
 
+# ------------------------------------------------------------ autotune phase
+
+
+def _spearman(a: list[float], b: list[float]) -> float:
+    """Spearman rank correlation (average ranks over ties)."""
+
+    def ranks(xs):
+        order = sorted(range(len(xs)), key=lambda i: xs[i])
+        r = [0.0] * len(xs)
+        i = 0
+        while i < len(order):
+            j = i
+            while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+                j += 1
+            avg = (i + j) / 2.0
+            for k in range(i, j + 1):
+                r[order[k]] = avg
+            i = j + 1
+        return r
+
+    ra, rb = ranks(a), ranks(b)
+    ma = sum(ra) / len(ra)
+    mb = sum(rb) / len(rb)
+    num = sum((x - ma) * (y - mb) for x, y in zip(ra, rb))
+    da = sum((x - ma) ** 2 for x in ra) ** 0.5
+    db = sum((y - mb) ** 2 for y in rb) ** 0.5
+    return num / (da * db) if da and db else 0.0
+
+
+def _autotune_grid(max_len: int, kv_budget_tokens: int):
+    """>= 8 measurable configs spanning the planner's knobs: slot counts,
+    both KV layouts, block sizes, and chunked admission — every member
+    inside the same iso-HBM KV budget the planner sweeps under."""
+    from repro.core.serveplan import ServeKnobs
+
+    nb = lambda bs: kv_budget_tokens // bs + 1
+    return [
+        ServeKnobs(slots=2, kv_layout="contiguous", block_size=16),
+        ServeKnobs(slots=4, kv_layout="contiguous", block_size=16),
+        ServeKnobs(slots=8, kv_layout="contiguous", block_size=16),
+        ServeKnobs(slots=16, kv_layout="contiguous", block_size=16),
+        ServeKnobs(slots=16, kv_layout="paged", block_size=8,
+                   num_blocks=nb(8)),
+        ServeKnobs(slots=16, kv_layout="paged", block_size=16,
+                   num_blocks=nb(16)),
+        ServeKnobs(slots=16, kv_layout="paged", block_size=32,
+                   num_blocks=nb(32)),
+        ServeKnobs(slots=4, kv_layout="paged", block_size=16,
+                   num_blocks=nb(16)),
+        ServeKnobs(slots=16, kv_layout="paged", block_size=16,
+                   num_blocks=nb(16), prefill_chunk=16, token_budget=16),
+        ServeKnobs(slots=8, kv_layout="paged", block_size=16,
+                   num_blocks=nb(16), prefill_chunk=16, token_budget=32),
+    ]
+
+
+def bench_autotune(
+    cfg,
+    params,
+    seed: int,
+    repeats: int = 3,
+    max_len: int = 64,
+    n_requests: int = 24,
+) -> dict:
+    """Closed-loop validation of the DSE serve planner (core/serveplan.py).
+
+    Phase A — rank agreement: price a grid of >= 8 real configs with the
+    analytic decode-step model (calibrated ONCE from two measured anchor
+    configs at different occupancies), measure every config's tokens/s on
+    the live engine, and check the model's top-1 pick lands in the measured
+    top-3 (plus Spearman rho over the full grid for color).
+
+    Phase B — A/B: run the planner over its full joint space under the same
+    iso-HBM budget, build the winning ServeConfig, and pair it against the
+    shipped default (slots=4, contiguous) on identical workloads; gate
+    autotuned >= 1.0x default tokens/s.
+    """
+    from repro.core.serveplan import (
+        Calibration,
+        ServeWorkload,
+        plan_serve,
+        price_decode_step,
+    )
+    from repro.serve.engine import Engine, ServeConfig
+
+    prompt_len, decode_len = 8, 12
+    wl = ServeWorkload(
+        concurrency=n_requests, prompt_len=prompt_len, decode_len=decode_len
+    )
+    kv_budget_tokens = 16 * max_len  # the largest grid member's footprint
+    grid = _autotune_grid(max_len, kv_budget_tokens)
+
+    def mk_requests(id_base: int):
+        from repro.serve.engine import Request
+
+        rng = np.random.default_rng(seed)
+        return [
+            Request(
+                prompt=rng.integers(0, cfg.vocab, prompt_len).astype(
+                    np.int32
+                ),
+                max_new_tokens=decode_len,
+                request_id=id_base + i,
+            )
+            for i in range(n_requests)
+        ]
+
+    def measure(scfg, id_base: int) -> float:
+        """Median-of-repeats tokens/s for one config on the fixed
+        workload, warmed so compiles never land in a timed window."""
+        with Engine(cfg, params, scfg) as eng:
+            eng.run(mk_requests(id_base))  # warm every jit trace
+            rates = []
+            for r in range(repeats):
+                reqs = mk_requests(id_base + (r + 1) * 100)
+                t0 = time.perf_counter()
+                outs = eng.run(reqs)
+                dt = time.perf_counter() - t0
+                rates.append(sum(len(o) for o in outs) / dt)
+        return sorted(rates)[len(rates) // 2]
+
+    measured = [
+        measure(
+            ServeConfig.from_plan_knobs(k, max_len=max_len, seed=seed),
+            50_000 + i * 1000,
+        )
+        for i, k in enumerate(grid)
+    ]
+    costs = [
+        price_decode_step(cfg, k, max_len=max_len, workload=wl) for k in grid
+    ]
+    assert all(c is not None for c in costs), "grid must be feasible"
+
+    # calibrate once from four anchors spanning the fitted features — two
+    # contiguous occupancies (overhead + per-row), one paged member
+    # (per-gathered-block), one chunked member (lane dispatch) — then rank
+    # everything else with the same terms
+    anchors = [0, 3, 5, 8]
+    calib = Calibration.fit(
+        [(costs[i], costs[i].rows / measured[i]) for i in anchors]
+    )
+    predicted = [c.tokens_per_s(calib) for c in costs]
+    pred_top1 = max(range(len(grid)), key=lambda i: predicted[i])
+    meas_rank = sorted(
+        range(len(grid)), key=lambda i: measured[i], reverse=True
+    )
+    top1_in_top3 = pred_top1 in meas_rank[:3]
+    rho = _spearman(predicted, measured)
+
+    # phase B: full-space planner winner vs the shipped default
+    plan = plan_serve(
+        cfg,
+        max_len=max_len,
+        workload=wl,
+        kv_budget_tokens=kv_budget_tokens,
+        calibration=calib,
+        cache=False,
+    )
+    tuned_cfg = ServeConfig.from_plan_knobs(
+        plan.knobs, max_len=max_len, seed=seed
+    )
+    default_cfg = ServeConfig(max_len=max_len, seed=seed)
+    tuned = measure(tuned_cfg, 80_000)
+    default = measure(default_cfg, 90_000)
+
+    return {
+        "max_len": max_len,
+        "requests": n_requests,
+        "prompt_len": prompt_len,
+        "decode_len": decode_len,
+        "kv_budget_tokens": kv_budget_tokens,
+        "grid_size": len(grid),
+        "grid": [
+            {
+                "knobs": dataclasses.asdict(k),
+                "measured_tokens_per_s": m,
+                "predicted_tokens_per_s": p,
+            }
+            for k, m, p in zip(grid, measured, predicted)
+        ],
+        "calibration": {
+            "anchors": anchors,
+            **dataclasses.asdict(calib),
+        },
+        "predicted_top1": pred_top1,
+        "measured_top3": meas_rank[:3],
+        "rank_agreement_top1_in_top3": top1_in_top3,
+        "spearman_rho": rho,
+        "planned_knobs": dataclasses.asdict(plan.knobs),
+        "plan_predicted_tokens_per_s": plan.predicted["tokens_per_s"],
+        "plan_swept_points": plan.predicted["swept_points"],
+        "autotuned_tokens_per_s": tuned,
+        "default_tokens_per_s": default,
+        "autotuned_vs_default_tokens_per_s": tuned / default,
+    }
+
+
 # ----------------------------------------------------------------- top level
 
 
@@ -1381,6 +1578,7 @@ def run(
     crash_recovery: bool = True,
     admission_storm: bool = True,
     sdc: bool = True,
+    autotune: bool = True,
     # serving-sized cache for the substrate A/B: at the smoke models' tiny
     # dims the decode step is fixed-overhead dominated, so the oracle's
     # max_len scan only becomes visible at a real cache extent
@@ -1530,6 +1728,8 @@ def run(
             overhead_cfg=sdc_overhead_cfg,
             overhead_slots=32,
         )
+    if autotune:
+        result["autotune"] = bench_autotune(cfg, params, seed, repeats)
     if scaling:
         result["decode_step_scaling"] = bench_decode_scaling(
             cfg, params, slots, ab_max_len, seed
@@ -1612,6 +1812,21 @@ def run(
             f"clean false positives={sd['clean_false_positives']} "
             f"bitwise_vs_off={sd['bitwise_identical_to_off']}"
         )
+    if autotune:
+        at = result["autotune"]
+        print(
+            f"autotune: top-1 predicted #{at['predicted_top1']} in measured "
+            f"top-3 {at['measured_top3']}: "
+            f"{at['rank_agreement_top1_in_top3']} "
+            f"(spearman {at['spearman_rho']:.2f} over "
+            f"{at['grid_size']} configs) | planned "
+            f"{at['planned_knobs']['slots']} slots "
+            f"{at['planned_knobs']['kv_layout']}/"
+            f"bs={at['planned_knobs']['block_size']}: "
+            f"{at['autotuned_tokens_per_s']:.1f} tok/s vs default "
+            f"{at['default_tokens_per_s']:.1f} "
+            f"({at['autotuned_vs_default_tokens_per_s']:.2f}x)"
+        )
     if scaling:
         sc = result["decode_step_scaling"]
         print(
@@ -1674,6 +1889,12 @@ def main():
         action="store_true",
         help="skip the ABFT overhead + seeded bit-flip detection phase",
     )
+    ap.add_argument(
+        "--no-autotune",
+        action="store_true",
+        help="skip the DSE-planner rank-agreement + autotuned-vs-default "
+        "phase",
+    )
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     run(
@@ -1690,6 +1911,7 @@ def main():
         crash_recovery=not args.no_crash_recovery,
         admission_storm=not args.no_admission_storm,
         sdc=not args.no_sdc,
+        autotune=not args.no_autotune,
     )
 
 

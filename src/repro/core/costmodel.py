@@ -538,3 +538,36 @@ class BatchedCostModel:
                 e = e + hsum * self.table.hop_pj
             out[i : i + len(e)] = e
         return out
+
+
+# ----------------------------------------------- serve decode-step pricing --
+# Vectorized twin of energy.attention_gather_cost: one call prices the
+# decode-attention gather for a whole grid of (block_size, kv_splits, ctx)
+# candidates — the serve-config planner (core/serveplan.py) sweeps hundreds
+# of knob combinations, and this keeps that sweep a single numpy pass the
+# same way evaluate_hierarchies keeps the allocation sweep batched.
+# tests/test_autotune.py asserts random-case parity with the scalar.
+
+
+def attention_gather_words(
+    ctx_len: np.ndarray,
+    block_size: np.ndarray,
+    *,
+    kv_heads: int,
+    head_dim: int,
+    kv_splits: np.ndarray | None = None,
+) -> np.ndarray:
+    """Per-row per-layer decode-attention words for broadcastable arrays of
+    live context lengths, block sizes and split counts (see
+    energy.attention_gather_cost for the count definitions)."""
+    ctx = np.asarray(ctx_len, dtype=np.int64)
+    bs = np.asarray(block_size, dtype=np.int64)
+    if (ctx < 1).any() or (bs < 1).any():
+        raise ValueError("ctx_len and block_size must be >= 1")
+    blocks = -(-ctx // bs)
+    splits = blocks if kv_splits is None else np.maximum(
+        np.asarray(kv_splits, dtype=np.int64), 1
+    )
+    kv_words = 2 * blocks * bs * kv_heads * head_dim
+    partial_words = 2 * splits * kv_heads * (head_dim + 2)
+    return kv_words + blocks + partial_words

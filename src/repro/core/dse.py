@@ -104,6 +104,14 @@ def pareto_prune(
     return frontier
 
 
+# Relative tolerance for the iso-throughput cycle comparison.  The limit is
+# the float product ``baseline.cycles * slack``, and a point whose cycles
+# were computed through a different sequence of float ops can land one ulp
+# above a mathematically-equal limit — most visibly the baseline itself,
+# which must always qualify at slack=1.0.
+ISO_CYCLES_RTOL = 1e-9
+
+
 def best_at_iso_throughput(
     points: Sequence[DesignPoint],
     baseline: DesignPoint,
@@ -112,10 +120,35 @@ def best_at_iso_throughput(
     """Lowest-energy point whose cycle count stays within ``slack`` x the
     baseline's — the paper's "keeping throughput constant" constraint (the
     PE array is fixed across the sweep, so cycles differ only through the
-    bandwidth roofline)."""
-    ok = [p for p in points if p.cycles <= baseline.cycles * slack]
+    bandwidth roofline).
+
+    The comparison carries a relative epsilon (``ISO_CYCLES_RTOL``) so float
+    ties — ``cycles == baseline.cycles * slack`` up to rounding — qualify;
+    without it the baseline itself can fail its own constraint at
+    ``slack=1.0`` when the product rounds below ``baseline.cycles``.  When
+    no point qualifies, the error reports the nearest miss and the slack
+    that would admit it instead of discarding the sweep's context."""
+    if not points:
+        raise ValueError(
+            "no design points to choose from (empty sweep — every "
+            "candidate hierarchy was infeasible or unpriceable)"
+        )
+    limit = baseline.cycles * slack
+    ok = [p for p in points if p.cycles <= limit * (1.0 + ISO_CYCLES_RTOL)]
     if not ok:
-        raise ValueError("no design point meets the throughput constraint")
+        nearest = min(points, key=lambda p: p.cycles)
+        need = (
+            nearest.cycles / baseline.cycles
+            if baseline.cycles > 0
+            else math.inf
+        )
+        raise ValueError(
+            f"no design point meets the throughput constraint: limit "
+            f"{limit:.6g} cycles ({slack:g}x baseline {baseline.cycles:.6g});"
+            f" nearest miss is {nearest.hw.name!r} at {nearest.cycles:.6g} "
+            f"cycles ({nearest.cycles - limit:.6g} over — needs slack >= "
+            f"{need:.9g}) out of {len(points)} swept points"
+        )
     return min(ok, key=lambda p: p.energy_pj)
 
 
@@ -127,10 +160,26 @@ class SweepCache:
 
     Keys hash the nest structure, the family's hierarchy descriptors and the
     enumeration parameters, so re-runs of an interrupted or extended sweep
-    only price new blocks.  Writes are atomic (tmp + rename)."""
+    only price new blocks.  Writes are atomic (tmp + rename) and
+    **merge-on-write**: a flush re-reads the file and folds this process's
+    new entries into whatever other sweep processes have published since we
+    loaded it (the same read-merge-replace idiom as ``mapper._store_tile``),
+    so concurrent sweeps sharing a cache file never clobber each other's
+    priced blocks.
 
-    def __init__(self, path: str | None):
+    Writes are also batched: ``put`` only marks the entry dirty, and the
+    file is rewritten once per ``flush_every`` new entries plus a final
+    :meth:`flush` at the end of the sweep — not once per put, which made a
+    long sweep's cache I/O O(N^2) in the number of blocks.  An interrupted
+    sweep therefore loses at most the last ``flush_every - 1`` priced
+    blocks, never the merged prefix."""
+
+    def __init__(self, path: str | None, flush_every: int = 16):
+        if flush_every < 1:
+            raise ValueError(f"flush_every must be >= 1: {flush_every}")
         self.path = path
+        self.flush_every = flush_every
+        self._dirty: dict[str, dict] = {}
         self._data: dict[str, dict] = {}
         if path and os.path.exists(path):
             self._data = load_json_dict(path)
@@ -140,8 +189,26 @@ class SweepCache:
 
     def put(self, key: str, value: dict) -> None:
         self._data[key] = value
-        if self.path:
-            atomic_write_json(self.path, self._data)
+        self._dirty[key] = value
+        if self.path and len(self._dirty) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        """Publish dirty entries: re-read the file, merge our new entries
+        over it, write atomically.  Entries published by other processes
+        since load are both preserved on disk and folded into this
+        instance, so later ``get``s see them too.  Best-effort like the
+        tile cache: an unwritable path keeps the in-memory results."""
+        if not self.path or not self._dirty:
+            return
+        on_disk = load_json_dict(self.path)
+        on_disk.update(self._dirty)
+        try:
+            atomic_write_json(self.path, on_disk)
+        except OSError:
+            return  # keep entries dirty; a later flush may succeed
+        self._data = {**on_disk, **self._data}
+        self._dirty = {}
 
 
 # Bump whenever the enumeration or cost-model arithmetic changes, so stale
@@ -323,25 +390,31 @@ def sweep_allocations(
         task_by_key = {t[0]: t for t in tasks}
 
         def record(ckey: str, blk: dict) -> None:
-            # persist each block as soon as it is priced, so an interrupted
-            # sweep resumes from the completed prefix
+            # batched persistence: the cache flushes every `flush_every`
+            # priced blocks (and once more below), so an interrupted sweep
+            # resumes from all but the newest unflushed blocks
             _k, nest, _array, fam, _m, _mf = task_by_key[ckey]
             blocks[(nest.key(), _family_signature(fam[0]))] = blk
             if cache:
                 cache.put(ckey, blk)
 
-        if workers > 0:
-            # spawn (not fork): callers may have JAX or other thread pools
-            # live in the parent, and fork() under threads can deadlock
-            with ProcessPoolExecutor(
-                max_workers=workers,
-                mp_context=multiprocessing.get_context("spawn"),
-            ) as pool:
-                for ckey, blk in pool.map(_pool_task, tasks):
-                    record(ckey, blk)
-        else:
-            for t in tasks:
-                record(*_pool_task(t))
+        try:
+            if workers > 0:
+                # spawn (not fork): callers may have JAX or other thread
+                # pools live in the parent, and fork() under threads can
+                # deadlock
+                with ProcessPoolExecutor(
+                    max_workers=workers,
+                    mp_context=multiprocessing.get_context("spawn"),
+                ) as pool:
+                    for ckey, blk in pool.map(_pool_task, tasks):
+                        record(ckey, blk)
+            else:
+                for t in tasks:
+                    record(*_pool_task(t))
+        finally:
+            if cache:
+                cache.flush()
 
     points: list[DesignPoint] = []
     for sig, idxs in families.items():

@@ -121,6 +121,73 @@ def abft_energy_pj(cost: AbftCost, table: CostTable) -> float:
     return cost.ops * table.mac_pj + cost.words * table.level_pj[-1]
 
 
+# ------------------------------------------------- serve decode traffic --
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionGatherCost:
+    """Per-row, per-layer decode-attention HBM traffic under the paged (or
+    split-pinned contiguous) flash-decoding kernel, as a function of
+    ``(block_size, kv_splits, live length)`` — the quantity the serve-config
+    planner (core/serveplan.py) sweeps.  All counts are 16-bit words."""
+
+    kv_words: int       # K+V reads, padded to whole blocks (fragmentation)
+    table_words: int    # block-table entries prefetched for the row
+    partial_words: int  # per-split online-softmax partials (m, l, acc)
+
+    @property
+    def words(self) -> int:
+        return self.kv_words + self.table_words + self.partial_words
+
+
+def attention_gather_cost(
+    ctx_len: int,
+    *,
+    block_size: int,
+    kv_heads: int,
+    head_dim: int,
+    kv_splits: int | None = None,
+) -> AttentionGatherCost:
+    """Count one row's decode-attention gather for one layer.
+
+    The kernel reads ``ceil(ctx_len / block_size)`` whole KV blocks per kv
+    head (the tail block is read in full even when mostly dead — the
+    internal-fragmentation cost of a large ``block_size``), prefetches that
+    many block-table entries, and writes+combines one ``(head_dim + 2)``
+    online-softmax partial per split per kv head (``m``, ``l``, and the
+    accumulator row).  ``kv_splits`` defaults to the live block count (the
+    paged kernel's grid skips dead splits); the contiguous twin pins it to
+    ``max_len / decode_block`` and pays the full combine."""
+    if ctx_len < 1 or block_size < 1:
+        raise ValueError(
+            f"ctx_len and block_size must be >= 1: {ctx_len}, {block_size}"
+        )
+    blocks = -(-ctx_len // block_size)
+    splits = blocks if kv_splits is None else max(kv_splits, 1)
+    return AttentionGatherCost(
+        kv_words=2 * blocks * block_size * kv_heads * head_dim,
+        table_words=blocks,
+        # each split's partial is written by the split pass and read by the
+        # combine pass, hence the factor 2
+        partial_words=2 * splits * kv_heads * (head_dim + 2),
+    )
+
+
+def serve_step_energy_pj(
+    macs: float, hbm_words: float, vmem_words: float, vmem_bytes: int
+) -> float:
+    """Paper Table-3 pricing of one decode step: MACs at datapath cost, HBM
+    words at DRAM cost, VMEM words at the SRAM energy of the given capacity
+    — the E = sum #acc_i * e_i contraction with the serve hierarchy's two
+    levels.  Used by core/serveplan.py to report energy-per-token next to
+    the throughput roofline."""
+    return (
+        macs * MAC_PJ
+        + hbm_words * DRAM_PJ
+        + vmem_words * asic_access_energy_pj(vmem_bytes)
+    )
+
+
 # TPU v5e constants (per chip) — shared with benchmarks/roofline.py.
 TPU_PEAK_FLOPS_BF16 = 197e12
 TPU_HBM_BYTES_PER_S = 819e9

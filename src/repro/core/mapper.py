@@ -59,6 +59,17 @@ class MatmulTiles:
             + self.bm * self.bn * 4
         )
 
+    def hbm_words(self, M: int, N: int, K: int) -> int:
+        """HBM<->VMEM traffic (words) of an (M, N, K) matmul blocked at
+        these tiles: A streams once per N-tile pass, B once per M-tile
+        pass, C is written once (the K loop accumulates in VMEM).  With a
+        serving-sized M <= bm the weight matrix B crosses HBM exactly once
+        — the quantity the decode-step planner (core/serveplan.py) prices.
+        """
+        n_m = -(-M // self.bm)
+        n_n = -(-N // self.bn)
+        return M * K * n_n + K * N * n_m + M * N
+
 
 # ------------------------------------------------------ tile-choice cache --
 # Two layers: functools.lru_cache in-process, plus an on-disk JSON store so
@@ -92,6 +103,37 @@ def _store_tile(path: str, key: str, t: MatmulTiles) -> None:
         pass  # cache is best-effort; the search result is still returned
 
 
+def _valid_cached_tile(
+    t: MatmulTiles, M: int, N: int, K: int, vmem_bytes: int, dtype_bytes: int
+) -> bool:
+    """A cache entry is only served if it could have come out of the search:
+    positive tile sides, (SUBLANES, LANES) hardware alignment, no side
+    larger than the padded problem, and a double-buffered working set that
+    fits the VMEM budget.  Anything else — a corrupt file, a stale schema
+    that slipped through the key, a hand-edited entry — would otherwise be
+    handed straight to every decode GEMM as a Pallas BlockSpec (``bm=0``
+    divides by zero inside the kernel grid; a misaligned or oversized tile
+    fails lowering or silently spills)."""
+    if not all(
+        isinstance(v, int) and v > 0 for v in (t.bm, t.bn, t.bk)
+    ):
+        return False
+    if t.bm % SUBLANES or t.bn % LANES or t.bk % LANES:
+        return False
+    if (
+        t.bm > round_up(M, SUBLANES)
+        or t.bn > round_up(N, LANES)
+        or t.bk > round_up(K, LANES)
+    ):
+        return False
+    if t.vmem_bytes(dtype_bytes) > vmem_bytes:
+        # the minimal aligned tile is servable even when a degenerate
+        # vmem budget can't fit it — the search itself can do no better,
+        # and rejecting it would re-search (and re-store) forever
+        return (t.bm, t.bn, t.bk) == (SUBLANES, LANES, LANES)
+    return True
+
+
 @functools.lru_cache(maxsize=512)
 def choose_matmul_tiles(
     M: int,
@@ -107,20 +149,24 @@ def choose_matmul_tiles(
     and the 128x128 MXU.  Falls back to a bandwidth-balanced analytic tile
     for degenerate shapes.  Results persist to an on-disk cache keyed by
     (M, N, K, vmem_bytes, dtype_bytes) — see REPRO_TILE_CACHE above — with
-    the lru_cache as the in-process layer.
+    the lru_cache as the in-process layer.  Cached values are validated
+    (positivity, sublane/lane alignment, VMEM fit) before being served; a
+    corrupt or stale entry falls back to the search and is overwritten.
     """
     path = _tile_cache_path()
     key = f"{_TILE_CACHE_SCHEMA}:{M},{N},{K},{vmem_bytes},{dtype_bytes}"
     if path:
         got = load_json_dict(path).get(key)
-        # guard the value shape too: a corrupt entry falls back to the search
         if isinstance(got, (list, tuple)) and len(got) == 3:
             try:
-                return MatmulTiles(
-                    bm=int(got[0]), bn=int(got[1]), bk=int(got[2])
-                )
+                t = MatmulTiles(bm=int(got[0]), bn=int(got[1]), bk=int(got[2]))
             except (TypeError, ValueError):
-                pass
+                t = None
+            if t is not None and _valid_cached_tile(
+                t, M, N, K, vmem_bytes, dtype_bytes
+            ):
+                return t
+        # fall through: the search result below overwrites the bad entry
     t = _search_matmul_tiles(M, N, K, vmem_bytes, dtype_bytes)
     if path:
         _store_tile(path, key, t)
@@ -151,13 +197,19 @@ def _search_matmul_tiles(
     bn = min(Np, max(LANES, round_down_pow2(bn, LANES)))
     bk = min(Kp, max(LANES, round_down_pow2(bk, LANES)))
     t = MatmulTiles(bm=bm, bn=bn, bk=bk)
-    # Shrink (bm first, then bn/bk) until the working set fits.
+
+    # Shrink (bm first, then bn/bk) until the working set fits, keeping the
+    # hardware alignment the cache validator enforces (halving 24 -> 12
+    # would break the SUBLANES multiple).
+    def _half(v: int, align: int) -> int:
+        return max(align, (v // 2) // align * align)
+
     while t.vmem_bytes(dtype_bytes) > vmem_bytes and t.bm > SUBLANES:
-        t = MatmulTiles(bm=t.bm // 2, bn=t.bn, bk=t.bk)
+        t = MatmulTiles(bm=_half(t.bm, SUBLANES), bn=t.bn, bk=t.bk)
     while t.vmem_bytes(dtype_bytes) > vmem_bytes and t.bk > LANES:
-        t = MatmulTiles(bm=t.bm, bn=t.bn, bk=t.bk // 2)
+        t = MatmulTiles(bm=t.bm, bn=t.bn, bk=_half(t.bk, LANES))
     while t.vmem_bytes(dtype_bytes) > vmem_bytes and t.bn > LANES:
-        t = MatmulTiles(bm=t.bm, bn=t.bn // 2, bk=t.bk)
+        t = MatmulTiles(bm=t.bm, bn=_half(t.bn, LANES), bk=t.bk)
     return t
 
 

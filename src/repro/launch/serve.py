@@ -138,9 +138,24 @@ def main():
                          "recovery report, and finish the in-flight requests")
     ap.add_argument("--static", action="store_true",
                     help="run the padded static-batch baseline instead")
+    ap.add_argument("--autotune", action="store_true",
+                    help="plan the serving knobs with the DSE planner "
+                         "(core/serveplan.py): sweep slots / kv layout / "
+                         "block_size / num_blocks / prefill_chunk / "
+                         "token_budget under an iso-HBM KV budget, take the "
+                         "Pareto winner, and serve with it.  Overrides "
+                         "--slots/--kv-layout/--block-size/--num-blocks/"
+                         "--prefill-chunk/--token-budget; kernel and "
+                         "durability flags still apply.  Winning plans "
+                         "persist in REPRO_SERVE_PLAN_CACHE")
+    ap.add_argument("--concurrency", type=int, default=None,
+                    help="autotune: offered concurrency to plan for "
+                         "(default: --requests)")
     args = ap.parse_args()
     if args.resume and not args.snapshot_dir:
         ap.error("--resume requires --snapshot-dir")
+    if args.autotune and args.static:
+        ap.error("--autotune plans the continuous engine (drop --static)")
     if args.static and (args.snapshot_dir or args.resume):
         ap.error("--snapshot-dir/--resume need the continuous engine "
                  "(drop --static)")
@@ -151,26 +166,64 @@ def main():
     cfg = get(args.arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    scfg = ServeConfig(
-        max_len=args.max_len, temperature=args.temperature, seed=args.seed,
-        scheduler=SchedulerConfig(
-            batch=args.slots, prefill_bucket=args.prefill_bucket,
-            prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
-            max_waiting=args.max_waiting, stall_patience=args.stall_patience,
-        ),
-        kv=KVConfig(
-            layout=args.kv_layout, block_size=args.block_size,
-            num_blocks=args.num_blocks,
-            prefix_sharing=not args.no_prefix_sharing,
-        ),
-        kernel=KernelConfig(
-            matmul=args.matmul, attention=args.attention,
-            abft=args.abft, scrub_every=args.scrub_every,
-        ),
-        durability=DurabilityConfig(
-            snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
-        ),
-    )
+    if args.autotune:
+        from repro.core.serveplan import ServeWorkload
+
+        scfg = ServeConfig.autotune(
+            cfg,
+            max_len=args.max_len,
+            workload=ServeWorkload(
+                concurrency=args.concurrency or args.requests,
+                prompt_len=16,
+                decode_len=max(2, args.new_tokens),
+            ),
+            temperature=args.temperature,
+            seed=args.seed,
+            kernel=KernelConfig(
+                matmul=args.matmul, attention=args.attention,
+                abft=args.abft, scrub_every=args.scrub_every,
+            ),
+            durability=DurabilityConfig(
+                snapshot_dir=args.snapshot_dir,
+                snapshot_every=args.snapshot_every,
+            ),
+        )
+        plan = scfg.autotune_plan
+        pred = plan.predicted
+        print(
+            f"[autotune] {plan.source}: slots={scfg.batch} "
+            f"kv={scfg.kv_layout}/bs={scfg.kv.block_size}"
+            f"/nb={scfg.kv.num_blocks} "
+            f"chunk={scfg.prefill_chunk} budget={scfg.token_budget} "
+            f"(predicted {pred.get('tokens_per_s', 0):.0f} tok/s over "
+            f"{pred.get('swept_points', '?')} swept points, "
+            f"frontier {plan.frontier_size})"
+        )
+    else:
+        scfg = ServeConfig(
+            max_len=args.max_len, temperature=args.temperature,
+            seed=args.seed,
+            scheduler=SchedulerConfig(
+                batch=args.slots, prefill_bucket=args.prefill_bucket,
+                prefill_chunk=args.prefill_chunk,
+                token_budget=args.token_budget,
+                max_waiting=args.max_waiting,
+                stall_patience=args.stall_patience,
+            ),
+            kv=KVConfig(
+                layout=args.kv_layout, block_size=args.block_size,
+                num_blocks=args.num_blocks,
+                prefix_sharing=not args.no_prefix_sharing,
+            ),
+            kernel=KernelConfig(
+                matmul=args.matmul, attention=args.attention,
+                abft=args.abft, scrub_every=args.scrub_every,
+            ),
+            durability=DurabilityConfig(
+                snapshot_dir=args.snapshot_dir,
+                snapshot_every=args.snapshot_every,
+            ),
+        )
 
     t0 = time.perf_counter()
     stamps: dict[int, list[float]] = {}

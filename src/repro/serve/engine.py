@@ -690,6 +690,90 @@ class ServeConfig:
             return self.num_blocks
         return self.batch * self.max_len // self.block_size + 1  # + sink
 
+    @classmethod
+    def from_plan_knobs(
+        cls,
+        knobs,
+        *,
+        max_len: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+        kernel: KernelConfig | None = None,
+        durability: DurabilityConfig | None = None,
+    ) -> "ServeConfig":
+        """Map planner knobs (core/serveplan.ServeKnobs) onto the nested
+        sub-configs.  Under the contiguous layout the planner's block_size
+        pins the decode kernel's online-softmax split (KVConfig.decode_block)
+        rather than a physical pool block."""
+        if knobs.kv_layout == "paged":
+            kv = KVConfig(
+                layout="paged", block_size=knobs.block_size,
+                num_blocks=knobs.num_blocks,
+            )
+        else:
+            kv = KVConfig(layout="contiguous", decode_block=knobs.block_size)
+        return cls(
+            max_len=max_len,
+            temperature=temperature,
+            seed=seed,
+            scheduler=SchedulerConfig(
+                batch=knobs.slots,
+                prefill_chunk=knobs.prefill_chunk,
+                token_budget=knobs.token_budget,
+            ),
+            kv=kv,
+            kernel=kernel,
+            durability=durability,
+        )
+
+    @classmethod
+    def autotune(
+        cls,
+        model_cfg: ModelConfig,
+        *,
+        max_len: int = 256,
+        workload=None,
+        hardware=None,
+        space=None,
+        kv_budget_tokens: int | None = None,
+        calibration=None,
+        cache: bool | str = True,
+        temperature: float = 0.0,
+        seed: int = 0,
+        kernel: KernelConfig | None = None,
+        durability: DurabilityConfig | None = None,
+    ) -> "ServeConfig":
+        """Build a ServeConfig from the DSE planner (core/serveplan.py):
+        sweep the joint (slots, layout, block_size, num_blocks,
+        prefill_chunk, token_budget) space under an iso-HBM KV budget, and
+        map the winning knobs onto the nested sub-configs.  The plan itself
+        is attached as ``cfg.autotune_plan`` for provenance; winners persist
+        in the REPRO_SERVE_PLAN_CACHE store, so repeat constructions are a
+        cache hit.  Kernel/durability choices are not planned — pass them
+        through unchanged."""
+        from repro.core import serveplan  # planner is numpy-only; lazy
+
+        plan = serveplan.plan_serve(
+            model_cfg,
+            max_len=max_len,
+            workload=workload,
+            hardware=hardware,
+            space=space,
+            kv_budget_tokens=kv_budget_tokens,
+            calibration=calibration,
+            cache=cache,
+        )
+        cfg = cls.from_plan_knobs(
+            plan.knobs,
+            max_len=max_len,
+            temperature=temperature,
+            seed=seed,
+            kernel=kernel,
+            durability=durability,
+        )
+        cfg.autotune_plan = plan
+        return cfg
+
 
 @dataclasses.dataclass
 class _ReqInfo:

@@ -15,6 +15,9 @@ def _isolated_tile_cache(tmp_path_factory):
     if "REPRO_TILE_CACHE" not in os.environ:
         path = tmp_path_factory.mktemp("tile-cache") / "matmul_tiles.json"
         os.environ["REPRO_TILE_CACHE"] = str(path)
+    if "REPRO_SERVE_PLAN_CACHE" not in os.environ:
+        path = tmp_path_factory.mktemp("plan-cache") / "serve_plans.json"
+        os.environ["REPRO_SERVE_PLAN_CACHE"] = str(path)
 
 
 def _env_int(name: str, default: int) -> int:

@@ -1,0 +1,353 @@
+"""Serve-config planner + tuning-path cache tests.
+
+Four layers of guarantees:
+
+  * the on-disk matmul-tile cache validates entries before serving them — a
+    corrupt/stale value falls back to the blocking search and is overwritten
+    (regression for the trust-any-3-int bug);
+  * the scalar (energy.attention_gather_cost) and vectorized
+    (costmodel.attention_gather_words) decode-gather counts agree, the
+    PR-wide scalar/vector parity idiom;
+  * core/serveplan.py: the sweep respects the iso-HBM budget, planning is
+    deterministic, the plan cache round-trips and re-plans over corrupt
+    entries, calibration fits recover known overheads, and admission-bound
+    token budgets cap occupancy;
+  * ServeConfig.autotune() yields a config a real Engine serves with.
+"""
+
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import energy as en
+from repro.core import mapper
+from repro.core import serveplan as sp
+from repro.core.costmodel import attention_gather_words
+from repro.core.jsonstore import load_json_dict
+
+
+def _tiny_model(**kw) -> ModelConfig:
+    base = dict(
+        name="plan-tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=256,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ------------------------------------------------ tile-cache validation ----
+
+
+def _tile_key(M, N, K, vmem_bytes, dtype_bytes=2):
+    return (
+        f"{mapper._TILE_CACHE_SCHEMA}:{M},{N},{K},{vmem_bytes},{dtype_bytes}"
+    )
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        [0, 128, 128],            # bm=0: divides the kernel grid by zero
+        [-8, 128, 128],           # negative
+        [12, 128, 128],           # bm not a SUBLANES multiple
+        [8, 100, 128],            # bn not a LANES multiple
+        [8, 128, 1 << 20],        # VMEM overflow
+        [1 << 20, 128, 128],      # larger than the padded problem
+        ["x", 128, 128],          # non-numeric entry
+    ],
+    ids=["zero", "negative", "sublane", "lane", "vmem", "oversize", "type"],
+)
+def test_tile_cache_rejects_corrupt_entry(tmp_path, monkeypatch, bad):
+    """Regression (pre-fix: any 3-int on-disk entry was trusted verbatim):
+    a corrupt tile-cache value must fall back to the search and be
+    overwritten with the searched tile."""
+    path = tmp_path / "tiles.json"
+    M, N, K, vmem = 8, 256, 256, en.TPU_VMEM_BYTES // 4
+    key = _tile_key(M, N, K, vmem)
+    path.write_text(json.dumps({key: bad}))
+    monkeypatch.setenv("REPRO_TILE_CACHE", str(path))
+    mapper.choose_matmul_tiles.cache_clear()
+    t = mapper.choose_matmul_tiles(M, N, K, vmem)
+    assert mapper._valid_cached_tile(t, M, N, K, vmem, 2), t
+    assert [t.bm, t.bn, t.bk] != bad
+    # and the bad entry was overwritten with the searched one
+    assert load_json_dict(str(path))[key] == [t.bm, t.bn, t.bk]
+
+
+def test_tile_cache_serves_valid_entry(tmp_path, monkeypatch):
+    """A legitimate cached tile is served as-is (no re-search churn)."""
+    path = tmp_path / "tiles.json"
+    M, N, K, vmem = 8, 256, 256, en.TPU_VMEM_BYTES // 4
+    key = _tile_key(M, N, K, vmem)
+    path.write_text(json.dumps({key: [8, 128, 128]}))
+    monkeypatch.setenv("REPRO_TILE_CACHE", str(path))
+    mapper.choose_matmul_tiles.cache_clear()
+    t = mapper.choose_matmul_tiles(M, N, K, vmem)
+    assert (t.bm, t.bn, t.bk) == (8, 128, 128)
+
+
+def test_search_results_pass_their_own_validator(tmp_path, monkeypatch):
+    """The search must never store a tile its own validator rejects (else
+    every process re-searches forever); exercised across shapes including
+    ones whose VMEM-overflow shrink loop used to break alignment."""
+    monkeypatch.setenv("REPRO_TILE_CACHE", str(tmp_path / "tiles.json"))
+    mapper.choose_matmul_tiles.cache_clear()
+    rng = random.Random(7)
+    for _ in range(20):
+        M = rng.randrange(1, 64)
+        N = rng.randrange(1, 2048)
+        K = rng.randrange(1, 2048)
+        vmem = rng.choice([1 << 16, 1 << 18, 1 << 20])
+        t = mapper.choose_matmul_tiles(M, N, K, vmem)
+        assert mapper._valid_cached_tile(t, M, N, K, vmem, 2), (M, N, K, vmem, t)
+
+
+# ---------------------------------------------- gather-count parity --------
+
+
+def test_attention_gather_scalar_vector_parity():
+    """costmodel.attention_gather_words == energy.attention_gather_cost
+    elementwise over random (ctx, block_size, splits) grids."""
+    rng = random.Random(1234)
+    for _ in range(50):
+        ctx = rng.randrange(1, 512)
+        bs = rng.choice([1, 8, 16, 32, 64])
+        kv_heads = rng.choice([1, 2, 8])
+        head_dim = rng.choice([32, 64, 128])
+        splits = rng.choice([None, 1, 4, 64])
+        want = en.attention_gather_cost(
+            ctx, block_size=bs, kv_heads=kv_heads, head_dim=head_dim,
+            kv_splits=splits,
+        ).words
+        got = attention_gather_words(
+            ctx, bs, kv_heads=kv_heads, head_dim=head_dim, kv_splits=splits
+        )
+        assert int(got) == want
+    # vectorized over a grid in one call
+    ctxs = np.array([1, 31, 32, 33, 500])
+    got = attention_gather_words(ctxs, 32, kv_heads=2, head_dim=64)
+    want = [
+        en.attention_gather_cost(int(c), block_size=32, kv_heads=2,
+                                 head_dim=64).words
+        for c in ctxs
+    ]
+    assert got.tolist() == want
+
+
+def test_attention_gather_fragmentation_monotone():
+    """Bigger blocks never reduce the KV read: the tail block is read whole,
+    so kv_words is non-decreasing in block_size at fixed context (totals
+    can dip because fewer splits mean fewer softmax partials)."""
+    ctx = 100
+    kv_words = [
+        en.attention_gather_cost(ctx, block_size=bs, kv_heads=2,
+                                 head_dim=64).kv_words
+        for bs in (8, 16, 32, 64)
+    ]
+    assert kv_words == sorted(kv_words)
+
+
+# ------------------------------------------------------- serveplan ---------
+
+
+def test_sweep_respects_iso_hbm_budget():
+    """Every swept point's usable KV pool fits the shared token budget —
+    the iso-HBM discipline that makes candidates comparable."""
+    cfg = _tiny_model()
+    budget = 8 * 64
+    pts = sp.sweep_serve_space(cfg, max_len=64, kv_budget_tokens=budget)
+    assert len(pts) >= 8
+    for p in pts:
+        k = p.knobs
+        if k.kv_layout == "paged":
+            usable_tokens = (k.num_blocks - 1) * k.block_size
+        else:
+            usable_tokens = k.slots * 64
+        assert usable_tokens <= budget, (k, usable_tokens)
+        assert p.cost.rows >= 1
+        assert p.us_per_token > 0 and p.ttft_ms > 0
+
+
+def test_plan_deterministic_and_cache_roundtrip(tmp_path):
+    cfg = _tiny_model()
+    path = str(tmp_path / "plans.json")
+    p1 = sp.plan_serve(cfg, max_len=64, cache=path)
+    p2 = sp.plan_serve(cfg, max_len=64, cache=path)
+    p3 = sp.plan_serve(cfg, max_len=64, cache=False)
+    assert p1.source == "search" and p2.source == "cache"
+    assert p1.knobs == p2.knobs == p3.knobs
+    assert p2.predicted["tokens_per_s"] == pytest.approx(
+        p1.predicted["tokens_per_s"]
+    )
+
+
+def test_plan_cache_corrupt_entry_replans(tmp_path):
+    """A corrupt/stale plan entry must be re-searched and overwritten, the
+    same defense the tile cache applies."""
+    cfg = _tiny_model()
+    path = str(tmp_path / "plans.json")
+    p1 = sp.plan_serve(cfg, max_len=64, cache=path)
+    data = load_json_dict(path)
+    (key,) = data.keys()
+    data[key]["knobs"]["block_size"] = -5  # corrupt in place
+    with open(path, "w") as f:
+        json.dump(data, f)
+    p2 = sp.plan_serve(cfg, max_len=64, cache=path)
+    assert p2.source == "search"
+    assert p2.knobs == p1.knobs
+    # and the entry on disk is healthy again
+    assert load_json_dict(path)[key]["knobs"]["block_size"] == p1.knobs.block_size
+
+
+def test_plan_key_separates_workloads(tmp_path):
+    """Different (workload, budget) tuples get different cache slots."""
+    cfg = _tiny_model()
+    path = str(tmp_path / "plans.json")
+    sp.plan_serve(cfg, max_len=64, cache=path)
+    sp.plan_serve(
+        cfg, max_len=64, cache=path,
+        workload=sp.ServeWorkload(concurrency=2, prompt_len=8, decode_len=8),
+    )
+    assert len(load_json_dict(path)) == 2
+
+
+def test_knob_validation_rejects_garbage():
+    good = sp.ServeKnobs(slots=4, kv_layout="paged", block_size=16,
+                         num_blocks=17)
+    good.validate(64)
+    bad = [
+        sp.ServeKnobs(slots=0, block_size=16),
+        sp.ServeKnobs(slots=4, kv_layout="ring", block_size=16),
+        sp.ServeKnobs(slots=4, block_size=48),          # 64 % 48 != 0
+        sp.ServeKnobs(slots=4, block_size=16, num_blocks=1),
+        sp.ServeKnobs(slots=4, kv_layout="contiguous", block_size=16,
+                      num_blocks=8),
+        sp.ServeKnobs(slots=4, block_size=16, prefill_chunk=0,
+                      token_budget=16),
+        sp.ServeKnobs(slots=4, block_size=16, prefill_chunk=32,
+                      token_budget=16),
+    ]
+    for k in bad:
+        with pytest.raises(ValueError):
+            k.validate(64)
+
+
+def test_calibration_fit_recovers_overhead():
+    cfg = _tiny_model()
+    mk = lambda slots: sp.price_decode_step(
+        cfg,
+        sp.ServeKnobs(slots=slots, kv_layout="contiguous", block_size=16),
+        max_len=64, workload=sp.ServeWorkload(),
+    )
+    cost = mk(4)
+    assert cost is not None
+    # one anchor: pure overhead
+    calib = sp.Calibration.fit([(cost, cost.roofline_s + 3e-3)])
+    assert calib.step_overhead_s == pytest.approx(3e-3)
+    assert calib.per_row_s == 0.0
+    # two anchors at different rows: overhead + per-row slope
+    cost8 = mk(8)
+    pairs = [
+        (cost, cost.roofline_s + 2e-3 + 1e-4 * cost.rows),
+        (cost8, cost8.roofline_s + 2e-3 + 1e-4 * cost8.rows),
+    ]
+    calib2 = sp.Calibration.fit(pairs)
+    assert calib2.step_overhead_s == pytest.approx(2e-3, rel=1e-6)
+    assert calib2.per_row_s == pytest.approx(1e-4, rel=1e-6)
+    # a measured step can't beat its roofline: negative residuals clamp
+    calib3 = sp.Calibration.fit([(cost, cost.roofline_s * 0.5)])
+    assert calib3.step_overhead_s == 0.0
+
+
+def test_calibration_fit_paged_and_chunked_terms():
+    """Anchors spanning layout and lane features recover the
+    per-gathered-block and chunked-lane surcharges exactly."""
+    cfg = _tiny_model()
+    wl = sp.ServeWorkload()
+    mk = lambda **kw: sp.price_decode_step(
+        cfg, sp.ServeKnobs(**kw), max_len=64, workload=wl
+    )
+    anchors = [
+        mk(slots=2, kv_layout="contiguous", block_size=16),
+        mk(slots=16, kv_layout="contiguous", block_size=16),
+        mk(slots=16, kv_layout="paged", block_size=16, num_blocks=65),
+        mk(slots=16, kv_layout="paged", block_size=16, num_blocks=65,
+           prefill_chunk=16, token_budget=16),
+    ]
+    true = sp.Calibration(
+        step_overhead_s=1e-3, per_row_s=5e-5, per_block_s=2e-5,
+        chunk_overhead_s=4e-4,
+    )
+    pairs = [(c, c.step_s(true)) for c in anchors]
+    got = sp.Calibration.fit(pairs)
+    assert got.step_overhead_s == pytest.approx(1e-3, rel=1e-6)
+    assert got.per_row_s == pytest.approx(5e-5, rel=1e-6)
+    assert got.per_block_s == pytest.approx(2e-5, rel=1e-6)
+    assert got.chunk_overhead_s == pytest.approx(4e-4, rel=1e-6)
+
+
+def test_admission_bound_budget_caps_occupancy():
+    """A starved prefill budget must cap steady-state rows (the
+    admission-bound regime), and with a per-step overhead that shows up as
+    lower predicted throughput."""
+    cfg = _tiny_model()
+    wl = sp.ServeWorkload(concurrency=16, prompt_len=64, decode_len=4)
+    mk = lambda budget: sp.price_decode_step(
+        cfg,
+        sp.ServeKnobs(slots=16, kv_layout="paged", block_size=16,
+                      num_blocks=200, prefill_chunk=16, token_budget=budget),
+        max_len=128, workload=wl,
+    )
+    starved, fed = mk(16), mk(256)
+    assert starved.rows < fed.rows
+    calib = sp.Calibration(step_overhead_s=1e-3)
+    assert starved.tokens_per_s(calib) < fed.tokens_per_s(calib)
+
+
+def test_infeasible_pool_is_dropped():
+    """A paged pool too small for even one request admits zero rows and is
+    dropped, not priced."""
+    cfg = _tiny_model()
+    knobs = sp.ServeKnobs(slots=4, kv_layout="paged", block_size=16,
+                          num_blocks=2)
+    wl = sp.ServeWorkload(concurrency=4, prompt_len=60, decode_len=4)
+    assert sp.price_decode_step(cfg, knobs, max_len=64, workload=wl) is None
+
+
+def test_planner_rejects_non_dense_models():
+    moe = _tiny_model(moe={"n_experts": 4, "top_k": 2})
+    with pytest.raises(ValueError, match="dense decoder-only"):
+        sp.plan_serve(moe, max_len=64, cache=False)
+
+
+# ---------------------------------------------------- engine integration ---
+
+
+def test_autotuned_config_serves():
+    """ServeConfig.autotune() must hand Engine a config it can actually
+    serve with — the closed loop, end to end on a tiny model."""
+    jax = pytest.importorskip("jax")
+    from repro.arch.model_zoo import build
+    from repro.serve.engine import Engine, Request, ServeConfig
+
+    cfg = _tiny_model()
+    scfg = ServeConfig.autotune(
+        cfg, max_len=64,
+        workload=sp.ServeWorkload(concurrency=3, prompt_len=8, decode_len=4),
+    )
+    plan = scfg.autotune_plan
+    assert plan.predicted["tokens_per_s"] > 0
+    assert scfg.batch == plan.knobs.slots
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = [
+        Request(np.array([3, 5, 7], dtype=np.int32), max_new=4, request_id=i)
+        for i in range(3)
+    ]
+    with Engine(cfg, params, scfg) as eng:
+        outs = eng.run(reqs)
+    assert all(len(o) == 4 for o in outs)

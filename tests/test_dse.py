@@ -257,3 +257,132 @@ def test_sweep_process_pool_matches_serial():
     pooled = sweep_allocations(layers, arr, hws, workers=2)
     key = lambda p: (p.hw.name, p.energy_pj, p.cycles)
     assert sorted(map(key, serial)) == sorted(map(key, pooled))
+
+
+# ------------------------------------------------- pareto property suite ----
+
+
+def test_pareto_idempotent_and_shuffle_invariant():
+    """Property: the frontier is a fixed point of pareto_prune, is
+    independent of input order, and contains no internally dominated pair."""
+    rng = random.Random(4242)
+    mk = lambda i, e, c: DesignPoint(
+        hw=HardwareConfig(f"h{i}", ArraySpec(dims=(1,)), (16,), (1024,)),
+        energy_pj=e, cycles=c,
+    )
+    key = lambda p: (p.energy_pj, p.cycles, p.hw.name)
+    for trial in range(100):
+        pts = [
+            mk(i, float(rng.randrange(1, 8)), float(rng.randrange(1, 8)))
+            for i in range(rng.randrange(1, 30))
+        ]
+        front = pareto_prune(pts)
+        # idempotence: pruning the frontier is a no-op
+        assert sorted(map(key, pareto_prune(front))) == sorted(map(key, front))
+        # shuffle invariance: the frontier is a function of the set
+        shuffled = pts[:]
+        rng.shuffle(shuffled)
+        assert sorted(map(key, pareto_prune(shuffled))) == sorted(
+            map(key, front)
+        )
+        # internal non-dominance: no member strictly dominates another
+        for p in front:
+            for q in front:
+                assert not dominates(
+                    (p.energy_pj, p.cycles), (q.energy_pj, q.cycles)
+                ), f"trial {trial}: frontier member dominates another"
+
+
+# ------------------------------------------------------ sweep-cache fixes ----
+
+
+def test_sweep_cache_concurrent_merge(tmp_path):
+    """Regression (pre-fix: put() rewrote the file from one process's
+    in-memory view): two cache instances on the same path must merge, not
+    clobber — B flushing after A must preserve A's entries."""
+    path = str(tmp_path / "cache.json")
+    a = dse_mod.SweepCache(path)
+    b = dse_mod.SweepCache(path)  # opened before A writes, like a 2nd proc
+    a.put("k1", {"v": 1})
+    a.flush()
+    b.put("k2", {"v": 2})
+    b.flush()
+    fresh = dse_mod.SweepCache(path)
+    assert fresh.get("k1") == {"v": 1}, "A's entry was clobbered by B"
+    assert fresh.get("k2") == {"v": 2}
+
+
+def test_sweep_cache_batched_flush(tmp_path, monkeypatch):
+    """Regression (pre-fix: one full-file rewrite per put, O(N^2) I/O over
+    a long sweep): N puts land in at most ceil(N / flush_every) writes,
+    with the remainder picked up by the final flush()."""
+    writes = []
+    real = dse_mod.atomic_write_json
+
+    def counting(path, data):
+        writes.append(len(data))
+        return real(path, data)
+
+    monkeypatch.setattr(dse_mod, "atomic_write_json", counting)
+    path = str(tmp_path / "cache.json")
+    c = dse_mod.SweepCache(path, flush_every=16)
+    for i in range(40):
+        c.put(f"k{i}", {"v": i})
+    assert len(writes) == 2  # at 16 and 32 dirty entries
+    c.flush()
+    assert len(writes) == 3
+    fresh = dse_mod.SweepCache(path)
+    assert all(fresh.get(f"k{i}") == {"v": i} for i in range(40))
+    c.flush()  # nothing dirty: no write
+    assert len(writes) == 3
+
+
+def test_sweep_flushes_cache_on_completion(tmp_path):
+    """sweep_allocations must leave every priced block on disk even though
+    puts are batched (the flush rides a finally, so partial sweeps keep
+    their work too)."""
+    arr, layers, hws = _tiny_setup()
+    path = str(tmp_path / "cache.json")
+    sweep_allocations(layers, arr, hws[:2], cache=path)
+    from repro.core.jsonstore import load_json_dict
+
+    assert len(load_json_dict(path)) > 0
+
+
+# ------------------------------------------- iso-throughput diagnostics ----
+
+
+def test_best_at_iso_nearest_miss_diagnostics():
+    """An unsatisfiable constraint must name the nearest miss and the slack
+    that would admit it, not raise bare (pre-fix: no context at all)."""
+    mk = lambda name, e, c: DesignPoint(
+        hw=HardwareConfig(name, ArraySpec(dims=(1,)), (16,), (1024,)),
+        energy_pj=e, cycles=c,
+    )
+    base = mk("base", 10.0, 100.0)
+    slow = mk("slow", 2.0, 200.0)
+    slower = mk("slower", 1.0, 400.0)
+    with pytest.raises(ValueError, match=r"nearest miss is 'slow'"):
+        best_at_iso_throughput([slow, slower], base, slack=0.5)
+    with pytest.raises(ValueError, match=r"needs slack >= 2"):
+        best_at_iso_throughput([slow, slower], base, slack=0.5)
+    with pytest.raises(ValueError, match=r"empty sweep"):
+        best_at_iso_throughput([], base)
+
+
+def test_best_at_iso_float_tie_qualifies():
+    """Regression (pre-fix: `cycles <= baseline.cycles * slack` with exact
+    float compare): a candidate sitting exactly at the constraint must
+    qualify even when the slack multiplication rounds down — here
+    0.3 * (1/3) < 0.1 in binary floating point."""
+    mk = lambda name, e, c: DesignPoint(
+        hw=HardwareConfig(name, ArraySpec(dims=(1,)), (16,), (1024,)),
+        energy_pj=e, cycles=c,
+    )
+    base = mk("base", 10.0, 0.3)
+    exactly_at_limit = mk("tie", 1.0, 0.1)
+    assert 0.3 * (1 / 3) < 0.1  # the float hazard this guards against
+    best = best_at_iso_throughput([exactly_at_limit], base, slack=1 / 3)
+    assert best.hw.name == "tie"
+    # and the baseline itself always qualifies at slack=1.0
+    assert best_at_iso_throughput([base], base).hw.name == "base"
